@@ -1,0 +1,58 @@
+"""Paper Table 4 analogue: heaviest conv layer × execution-method ladder.
+
+For each benchmark CNN, times the heaviest convolution layer under every
+ladder method on this host (XLA:CPU wall time — the *relative* ladder
+ordering is the reproduction target; absolute mobile-GPU numbers are not
+reproducible off-device) and derives per-method HLO bytes/FLOPs to model
+the TPU roofline effect of each layout/blocking choice.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import CNNEngine
+from repro.core.methods import Method, LADDER
+from repro.core.netdefs import NETWORKS
+from repro.launch.hlo_analysis import analyze_hlo_text
+
+BATCH = 16  # the paper's batch of 16 frames (§6.2)
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(nets=("lenet5", "cifar10", "alexnet"), batch=BATCH):
+    rows = []
+    for name in nets:
+        net = NETWORKS[name]()
+        b = batch if name != "alexnet" else 4  # CPU-budget batch for alexnet
+        eng = CNNEngine(net, method=Method.SEQ_REF)
+        params = eng.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (b, *net.input_shape),
+                              jnp.float32)
+        layer, layer_in = eng.heaviest_conv(params, x)
+        base_us = None
+        for method in LADDER:
+            fn = jax.jit(eng.conv_layer_fn(layer, method))
+            us = _time(fn, params, layer_in)
+            compiled = fn.lower(params, layer_in).compile()
+            costs = analyze_hlo_text(compiled.as_text())
+            if method == Method.SEQ_REF:
+                base_us = us
+            rows.append({
+                "bench": f"conv_ladder/{name}/{layer}/{method.value}",
+                "us_per_call": us,
+                "derived": (f"speedup={base_us/us:.2f}x "
+                            f"flops={costs.flops:.3e} bytes={costs.bytes:.3e} "
+                            f"ai={costs.flops/max(costs.bytes,1):.2f}"),
+            })
+    return rows

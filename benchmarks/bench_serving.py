@@ -1,0 +1,38 @@
+"""Serving throughput (the paper's end-to-end deployment scenario, scaled
+to the assigned architectures): tokens/s of the batched engine on reduced
+configs, plus decode-step wall time."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.config import get_arch
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+
+ARCHS = ("gemma2-2b", "internlm2-20b", "rwkv6-1.6b")
+
+
+def run(archs=ARCHS):
+    rows = []
+    for arch in archs:
+        cfg = get_arch(arch).reduced()
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(model, params, max_batch=4, max_len=96)
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        for rid in range(6):
+            eng.submit(Request(rid, rng.integers(
+                0, cfg.vocab_size, size=8).tolist(), max_new_tokens=12))
+        done = eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        toks = sum(len(v) for v in done.values())
+        rows.append({
+            "bench": f"serving/{arch}(reduced)",
+            "us_per_call": dt / max(toks, 1) * 1e6,
+            "derived": f"tok_s={toks/dt:.1f} requests={len(done)}",
+        })
+    return rows

@@ -1,0 +1,141 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs_global  / (chips × 197 TFLOP/s bf16)
+  memory     = HLO_bytes_global  / (chips × 819 GB/s HBM)
+  collective = coll_bytes_global / (chips × 50 GB/s ICI link)
+
+The dry-run records per-device values (the SPMD module), so each term
+reduces to per-device / unit-rate.  MODEL_FLOPS uses 6·N·D (training) or
+2·N·D (inference) with N = active, non-embedding params; the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/replication/dispatch waste.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+Writes results/roofline.csv and prints the markdown table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_SUGGEST = {
+    "compute": ("shard the replicated attention heads (pad to the model-axis "
+                "multiple) or cut remat recompute"),
+    "memory": ("fuse elementwise chains / widen kernel blocks so each HBM "
+               "byte feeds more FLOPs; int8 KV for decode"),
+    "collective": ("reduce per-layer all-gathers (FSDP prefetch/reuse), "
+                   "overlap collectives with compute, or move the axis with "
+                   "the most traffic onto faster links"),
+}
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs per step: 6·N·D train, 2·N·D forward (N active,
+    non-embedding)."""
+    from repro.models.registry import analytic_param_count
+
+    n = analytic_param_count(cfg, active_only=True, non_embedding=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per request
+
+
+def analyze_record(rec: dict) -> dict:
+    from repro.core.config import get_arch, get_shape
+
+    cfg = get_arch(rec["arch"])
+    shape = get_shape(rec["shape"])
+    chips = rec["num_devices"]
+    flops_dev = rec["hlo"]["flops"]
+    bytes_dev = rec["hlo"]["bytes"]
+    coll_dev = rec["hlo"]["collective_bytes_total"]
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_dev / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get).replace("_s", "")
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * chips
+    out = {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        **terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "mem_gib_per_dev": rec["memory"]["per_device_total_bytes"] / 2**30,
+        "fits_16gb": rec["memory"]["per_device_total_bytes"] <= 16e9,
+        "suggest": _SUGGEST[dominant],
+        "step_s_bound": max(terms.values()),
+    }
+    return out
+
+
+def load_all(dirpath: Path, mesh: str = None):
+    rows = []
+    for f in sorted(dirpath.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "error": rec.get("error", "?")})
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | coll s | "
+           "dominant | useful | GiB/dev | fits |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR: {r['error'][:40]} |||||||")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['mem_gib_per_dev']:.2f} "
+            f"| {'Y' if r['fits_16gb'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--csv", default="results/roofline.csv")
+    args = ap.parse_args()
+    rows = load_all(Path(args.dir), args.mesh)
+    ok = [r for r in rows if "error" not in r]
+    print(to_markdown(rows))
+    import csv as _csv
+
+    Path(args.csv).parent.mkdir(parents=True, exist_ok=True)
+    if ok:
+        with open(args.csv, "w", newline="") as f:
+            w = _csv.DictWriter(f, fieldnames=list(ok[0].keys()))
+            w.writeheader()
+            w.writerows(ok)
+        print(f"\n[roofline] {len(ok)} rows -> {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table / deliverable figure.
+
+Prints ``name,us_per_call,derived`` CSV (assignment contract):
+  * bench_conv_ladder    — paper Table 4 (heaviest conv layer × method)
+  * bench_network_ladder — paper Table 3 (whole network × method, + FPS)
+  * bench_fc_fused       — paper §4 FC fusion (bias+act epilogue)
+  * bench_serving        — deployment scenario throughput
+  * roofline             — §Roofline terms from the dry-run artifacts
+                           (rows appear when results/dryrun/ is populated)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    suites = []
+    from benchmarks import (  # noqa: E402
+        bench_conv_ladder,
+        bench_network_ladder,
+        bench_fc_fused,
+        bench_serving,
+    )
+
+    suites = [
+        ("conv_ladder", bench_conv_ladder.run),
+        ("network_ladder", bench_network_ladder.run),
+        ("fc_fused", bench_fc_fused.run),
+        ("serving", bench_serving.run),
+    ]
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(f"{row['bench']},{row['us_per_call']:.1f},"
+                      f"\"{row['derived']}\"", flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"{name},ERROR,\"{type(e).__name__}: {e}\"", flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+    # roofline rows (dry-run artifacts; baseline table lives in EXPERIMENTS.md)
+    try:
+        from pathlib import Path
+
+        from benchmarks.roofline import load_all
+
+        rows = load_all(Path("results/dryrun"), mesh="16x16")
+        for r in rows:
+            if "error" in r:
+                continue
+            print(f"roofline/{r['arch']}/{r['shape']},"
+                  f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.1f},"
+                  f"\"dominant={r['dominant']} useful={r['useful_ratio']:.2f}"
+                  f" fits={r['fits_16gb']}\"", flush=True)
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline,SKIPPED,\"{e}\"", flush=True)
+
+
+if __name__ == "__main__":
+    main()

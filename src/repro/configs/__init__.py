@@ -1,0 +1,15 @@
+"""Assigned-architecture configs (one module per ``--arch`` id) plus the
+paper's own CNN benchmark networks.  Importing this package registers all
+architectures with ``repro.core.config``."""
+from repro.configs import (  # noqa: F401
+    llama_3_2_vision_11b,
+    seamless_m4t_large_v2,
+    grok_1_314b,
+    gemma2_2b,
+    rwkv6_1_6b,
+    starcoder2_15b,
+    internlm2_20b,
+    qwen1_5_32b,
+    zamba2_1_2b,
+    qwen3_moe_30b_a3b,
+)

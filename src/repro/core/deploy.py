@@ -1,0 +1,101 @@
+"""Model deployment pipeline (paper §2.2 / Fig. 2).
+
+Train-side: serialize a trained model (net definition + weights) into a
+device-ready directory — ``manifest.json`` (architecture, layer table,
+dtype, version) + ``weights.npz``.  Device-side: load and verify, yielding
+the exact structures the engine executes.  This is the Caffe→convert→
+upload→execute path with JAX in both roles.
+
+Also used by the transformer stack's checkpointing (``repro.train.checkpoint``
+wraps the same format with sharding metadata).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.netdefs import LayerSpec, NetworkDef, NETWORKS
+
+FORMAT_VERSION = 1
+
+
+def _flatten(params: dict, prefix: str = "") -> Dict[str, np.ndarray]:
+    flat = {}
+    for k, v in params.items():
+        key = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            flat.update(_flatten(v, key))
+        else:
+            flat[key] = np.asarray(v)
+    return flat
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> dict:
+    out: dict = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = jnp.asarray(v)
+    return out
+
+
+def save_model(path, net: NetworkDef, params: dict, extra: dict = None) -> None:
+    """Train-side conversion: write the deployable artifact."""
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(params)
+    np.savez(path / "weights.npz", **flat)
+    digest = hashlib.sha256()
+    for k in sorted(flat):
+        digest.update(k.encode())
+        digest.update(flat[k].tobytes())
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "network": dataclasses.asdict(net),
+        "tensors": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                    for k, v in flat.items()},
+        "weights_sha256": digest.hexdigest(),
+        "extra": extra or {},
+    }
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=2))
+
+
+def load_model(path) -> Tuple[NetworkDef, dict, dict]:
+    """Device-side load: verify integrity, rebuild net + params."""
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    if manifest["format_version"] != FORMAT_VERSION:
+        raise ValueError(f"format version {manifest['format_version']}")
+    data = np.load(path / "weights.npz")
+    flat = {k: data[k] for k in data.files}
+    digest = hashlib.sha256()
+    for k in sorted(flat):
+        digest.update(k.encode())
+        digest.update(flat[k].tobytes())
+    if digest.hexdigest() != manifest["weights_sha256"]:
+        raise ValueError("weight checksum mismatch — corrupted artifact")
+    for k, meta in manifest["tensors"].items():
+        if list(flat[k].shape) != meta["shape"]:
+            raise ValueError(f"tensor {k} shape mismatch")
+    nd = manifest["network"]
+    net = NetworkDef(
+        name=nd["name"],
+        input_shape=tuple(nd["input_shape"]),
+        num_classes=nd["num_classes"],
+        layers=tuple(
+            LayerSpec(**{**l, "kernel": tuple(l["kernel"]),
+                         "stride": tuple(l["stride"]),
+                         "padding": tuple(l["padding"])})
+            for l in nd["layers"]
+        ),
+    )
+    return net, _unflatten(flat), manifest["extra"]

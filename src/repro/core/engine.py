@@ -1,0 +1,208 @@
+"""The CNNdroid inference engine: forward-path executor with per-layer
+method selection (the paper's core deliverable).
+
+The engine owns:
+* parameter init / loading (via ``core.deploy`` — the Caffe→device path),
+* the forward executor with the execution-method ladder for conv/FC layers,
+* fused-activation scheduling (ReLU folded into the producing layer —
+  the TPU-native realization of the paper's Fig. 5 CPU/GPU overlap),
+* per-layer instrumentation used by the benchmark harness.
+
+Pooling and LRN run as plain XLA ops ("accelerated on mobile CPU via
+multi-threading" in the paper; on our stack XLA:CPU/TPU handles them).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.methods import Method, conv2d, fc_fused, fc_seq_ref
+from repro.core.netdefs import LayerSpec, NetworkDef
+
+
+def _pool(x, spec: LayerSpec):
+    kh, kw = spec.kernel
+    sy, sx = spec.stride
+    if spec.pool_kind == "max":
+        out = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 1, kh, kw), (1, 1, sy, sx), "VALID"
+        )
+    else:
+        out = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, 1, kh, kw), (1, 1, sy, sx), "VALID"
+        ) / float(kh * kw)
+    if spec.relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def _lrn(x, spec: LayerSpec):
+    """Local response normalization across channels (AlexNet-style)."""
+    sq = x.astype(jnp.float32) ** 2
+    n = spec.lrn_n
+    pad = n // 2
+    sq_p = jnp.pad(sq, ((0, 0), (pad, pad), (0, 0), (0, 0)))
+    acc = jnp.zeros_like(sq)
+    for i in range(n):
+        acc = acc + jax.lax.slice_in_dim(sq_p, i, i + x.shape[1], axis=1)
+    denom = (spec.lrn_k + spec.lrn_alpha * acc) ** spec.lrn_beta
+    return (x.astype(jnp.float32) / denom).astype(x.dtype)
+
+
+class CNNEngine:
+    """Forward-path executor for a trained CNN."""
+
+    def __init__(self, net: NetworkDef, method: Method = Method.ADVANCED_SIMD_8,
+                 use_pallas: bool = False, fuse_relu: bool = True,
+                 per_layer_methods: Optional[Dict[str, Method]] = None):
+        self.net = net
+        self.method = method
+        self.use_pallas = use_pallas
+        self.fuse_relu = fuse_relu
+        self.per_layer_methods = per_layer_methods or {}
+        self._shapes = self._infer_shapes()
+
+    # -- parameters -----------------------------------------------------------
+    def _infer_shapes(self) -> Dict[str, Tuple]:
+        """Propagate shapes through the net to size conv/fc parameters."""
+        c, h, w = self.net.input_shape
+        shapes: Dict[str, Tuple] = {}
+        flat: Optional[int] = None
+        for spec in self.net.layers:
+            if spec.kind == "conv":
+                kh, kw = spec.kernel
+                shapes[spec.name] = (spec.out_channels, c, kh, kw)
+                h = (h + 2 * spec.padding[0] - kh) // spec.stride[0] + 1
+                w = (w + 2 * spec.padding[1] - kw) // spec.stride[1] + 1
+                c = spec.out_channels
+            elif spec.kind == "pool":
+                kh, kw = spec.kernel
+                h = (h - kh) // spec.stride[0] + 1
+                w = (w - kw) // spec.stride[1] + 1
+            elif spec.kind == "flatten":
+                flat = c * h * w
+            elif spec.kind == "fc":
+                d_in = flat if flat is not None else c
+                shapes[spec.name] = (d_in, spec.out_channels)
+                flat = spec.out_channels
+        return shapes
+
+    def init(self, key) -> Dict[str, Dict[str, jnp.ndarray]]:
+        params = {}
+        for spec in self.net.layers:
+            if spec.kind == "conv":
+                oc, ic, kh, kw = self._shapes[spec.name]
+                key, k1 = jax.random.split(key)
+                std = (2.0 / (ic * kh * kw)) ** 0.5
+                params[spec.name] = {
+                    "w": std * jax.random.normal(k1, (oc, ic, kh, kw),
+                                                 jnp.float32),
+                    "b": jnp.zeros((oc,), jnp.float32),
+                }
+            elif spec.kind == "fc":
+                d_in, d_out = self._shapes[spec.name]
+                key, k1 = jax.random.split(key)
+                std = (2.0 / d_in) ** 0.5
+                params[spec.name] = {
+                    "w": std * jax.random.normal(k1, (d_in, d_out),
+                                                 jnp.float32),
+                    "b": jnp.zeros((d_out,), jnp.float32),
+                }
+        return params
+
+    # -- forward ----------------------------------------------------------------
+    def _method_for(self, name: str) -> Method:
+        return self.per_layer_methods.get(name, self.method)
+
+    def forward(self, params, x, collect: Optional[dict] = None):
+        """x: [N, C, H, W] (a batch of frames, paper §4).  ``collect``
+        (optional dict) receives per-layer outputs for inspection."""
+        layers = list(self.net.layers)
+        i = 0
+        while i < len(layers):
+            spec = layers[i]
+            # fused-activation scheduling: a standalone relu following a
+            # conv/fc/pool is folded into that layer's epilogue
+            fused_relu = spec.relu
+            if (self.fuse_relu and i + 1 < len(layers)
+                    and layers[i + 1].kind == "relu"
+                    and spec.kind in ("conv", "fc", "pool")):
+                fused_relu = True
+            if spec.kind == "conv":
+                p = params[spec.name]
+                x = conv2d(x, p["w"], p["b"], self._method_for(spec.name),
+                           spec.stride, spec.padding, fused_relu,
+                           self.use_pallas)
+            elif spec.kind == "pool":
+                x = _pool(x, spec)
+                if fused_relu and not spec.relu:
+                    x = jnp.maximum(x, 0.0)
+            elif spec.kind == "lrn":
+                x = _lrn(x, spec)
+            elif spec.kind == "flatten":
+                x = x.reshape(x.shape[0], -1)
+            elif spec.kind == "fc":
+                p = params[spec.name]
+                if self._method_for(spec.name) == Method.SEQ_REF:
+                    x = fc_seq_ref(x, p["w"], p["b"], fused_relu)
+                else:
+                    x = fc_fused(x, p["w"], p["b"], fused_relu,
+                                 self.use_pallas)
+            elif spec.kind == "relu":
+                if not (self.fuse_relu and i > 0
+                        and layers[i - 1].kind in ("conv", "fc", "pool")):
+                    x = jnp.maximum(x, 0.0)
+            elif spec.kind == "softmax":
+                x = jax.nn.softmax(x.astype(jnp.float32), axis=-1)
+            else:
+                raise ValueError(spec.kind)
+            if collect is not None:
+                collect[spec.name] = x
+            i += 1
+        return x
+
+    def jit_forward(self):
+        return jax.jit(self.forward)
+
+    # -- instrumentation ----------------------------------------------------------
+    def time_forward(self, params, x, iters: int = 3) -> float:
+        fn = self.jit_forward()
+        fn(params, x).block_until_ready()  # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn(params, x).block_until_ready()
+        return (time.perf_counter() - t0) / iters
+
+    def heaviest_conv(self, params, x) -> Tuple[str, "jnp.ndarray"]:
+        """The conv layer with the most MACs (paper Table 4 target) and its
+        input activation."""
+        best, best_macs, best_in = None, -1, None
+        acts: dict = {}
+        self.forward(params, x, collect=acts)
+        cur = x
+        c, h, w = self.net.input_shape
+        for spec in self.net.layers:
+            if spec.kind == "conv":
+                oc, ic, kh, kw = self._shapes[spec.name]
+                out = acts[spec.name]
+                macs = int(np.prod(out.shape)) * ic * kh * kw
+                if macs > best_macs:
+                    best, best_macs, best_in = spec, macs, cur
+            cur = acts[spec.name]
+        return best.name, best_in
+
+    def conv_layer_fn(self, name: str, method: Method):
+        spec = next(s for s in self.net.layers if s.name == name)
+
+        def fn(params, x):
+            p = params[name]
+            return conv2d(x, p["w"], p["b"], method, spec.stride,
+                          spec.padding, True, self.use_pallas)
+
+        return fn

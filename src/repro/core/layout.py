@@ -1,0 +1,55 @@
+"""Dimension swapping — the paper's §4.3 layout transformation.
+
+CNNdroid's "basic SIMD" method moves channels to the lowest (fastest-
+varying) dimension so the innermost reduction vectorizes: NCHW → NHWC.
+On TPU the lane width is 128 (not 4), so the same transformation also pads
+channels up to the lane multiple; the padding is stripped on the way out.
+
+These helpers are used by the engine (host-side, overlapped with device
+compute — the Fig. 5 scheduling analogue) and by the kernels' ops wrappers.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+LANES = 128  # TPU vector lane width (the paper's "4" on 128-bit mobile SIMD)
+
+
+def nchw_to_nhwc(x):
+    return jnp.transpose(x, (0, 2, 3, 1))
+
+
+def nhwc_to_nchw(x):
+    return jnp.transpose(x, (0, 3, 1, 2))
+
+
+def oihw_to_hwio(k):
+    """Kernel layout swap: [out_c, in_c, kh, kw] -> [kh, kw, in_c, out_c]."""
+    return jnp.transpose(k, (2, 3, 1, 0))
+
+
+def hwio_to_oihw(k):
+    return jnp.transpose(k, (3, 2, 0, 1))
+
+
+def pad_axis(x, axis: int, multiple: int):
+    """Zero-pad `axis` up to the next multiple; returns (padded, orig_size)."""
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def pad_channels_nhwc(x, multiple: int = LANES):
+    return pad_axis(x, 3, multiple)
+
+
+def unpad_axis(x, axis: int, size: int):
+    if x.shape[axis] == size:
+        return x
+    return jnp.take(x, jnp.arange(size), axis=axis)

@@ -1,0 +1,253 @@
+"""The CNNdroid execution-method ladder (§4 of the paper), in JAX.
+
+Each method computes the same convolution (or FC) with a different
+data-layout / blocking strategy.  On this CPU container the four methods
+are honest algorithmic restagings whose XLA lowerings differ exactly the
+way the paper's RenderScript kernels differ (loop order, layout, reuse);
+on TPU the corresponding Pallas kernels in ``repro.kernels.conv2d`` are
+selected via ``use_pallas``.
+
+Ladder (paper table 3/4 columns):
+  SEQ_REF          — §4.1 CPU-only sequential: direct NCHW convolution,
+                     kernel-position loops, no vectorized reduction.
+  BASIC_PARALLEL   — §4.2 one thread per output element, NCHW, width
+                     innermost: parallel over outputs, scalar channel loop.
+  BASIC_SIMD       — §4.3 dimension swapping: NHWC, channels innermost,
+                     vectorized channel dot product.
+  ADVANCED_SIMD_4/8 — §4.4 each thread computes 4/8 output channels: im2col
+                     patch reuse across an output-channel block + fused
+                     bias/activation epilogue (on TPU: one MXU matmul per
+                     patch block).
+"""
+from __future__ import annotations
+
+import enum
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import nchw_to_nhwc, nhwc_to_nchw, oihw_to_hwio
+
+
+class Method(enum.Enum):
+    SEQ_REF = "seq_ref"
+    BASIC_PARALLEL = "basic_parallel"
+    BASIC_SIMD = "basic_simd"
+    ADVANCED_SIMD_4 = "advanced_simd_4"
+    ADVANCED_SIMD_8 = "advanced_simd_8"
+
+
+LADDER = (
+    Method.SEQ_REF,
+    Method.BASIC_PARALLEL,
+    Method.BASIC_SIMD,
+    Method.ADVANCED_SIMD_4,
+    Method.ADVANCED_SIMD_8,
+)
+
+
+def _out_size(size: int, k: int, stride: int, pad: int) -> int:
+    return (size + 2 * pad - k) // stride + 1
+
+
+# ---------------------------------------------------------------------------
+# §4.1 sequential reference — direct convolution, NCHW, no reuse structure
+# ---------------------------------------------------------------------------
+
+
+def conv2d_seq_ref(x, w, b, stride=(1, 1), padding=(0, 0), relu=False):
+    """x: [N, C, H, W]; w: [OC, C, KH, KW]; b: [OC].
+
+    Literal restaging of the sequential loop nest: for every kernel offset
+    (kh, kw) accumulate x[...] * w[...] — the reduction is over *kernel
+    positions*, never a vectorized channel dot.
+    """
+    n, c, h, wd = x.shape
+    oc, _, kh, kw = w.shape
+    sy, sx = stride
+    py, px = padding
+    xp = jnp.pad(x, ((0, 0), (0, 0), (py, py), (px, px)))
+    oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
+    out = jnp.zeros((n, oc, oh, ow), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xp, (0, 0, i, j),
+                (n, c, i + (oh - 1) * sy + 1, j + (ow - 1) * sx + 1),
+                (1, 1, sy, sx),
+            )  # [n, c, oh, ow]
+            out = out + jnp.einsum(
+                "nchw,oc->nohw", patch.astype(jnp.float32),
+                w[:, :, i, j].astype(jnp.float32),
+            )
+    out = out + b[None, :, None, None].astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# §4.2 basic parallel — one output element per thread, NCHW
+# ---------------------------------------------------------------------------
+
+
+def conv2d_basic_parallel(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
+                          use_pallas=False):
+    """Parallel over output elements; each computes its own receptive-field
+    reduction in NCHW order (channels are the OUTER reduction loop, width
+    inner — the paper's §4.2 loop order)."""
+    if use_pallas:
+        from repro.kernels.conv2d import ops as conv_ops
+
+        return conv_ops.conv2d(x, w, b, stride, padding, relu,
+                               method="basic_parallel")
+    n, c, h, wd = x.shape
+    oc, _, kh, kw = w.shape
+    sy, sx = stride
+    py, px = padding
+    xp = jnp.pad(x, ((0, 0), (0, 0), (py, py), (px, px)))
+    oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
+    # extract_patches: [n, c*kh*kw, oh, ow] then reduce with the kernel.
+    patches = jax.lax.conv_general_dilated_patches(
+        xp, (kh, kw), (sy, sx), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # [n, c*kh*kw, oh, ow]
+    wf = w.reshape(oc, c * kh * kw)
+    out = jnp.einsum("nkhw,ok->nohw", patches.astype(jnp.float32),
+                     wf.astype(jnp.float32))
+    out = out + b[None, :, None, None].astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# §4.3 basic SIMD — dimension swapping, channels innermost
+# ---------------------------------------------------------------------------
+
+
+def conv2d_basic_simd(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
+                      use_pallas=False):
+    """NHWC: the channel axis is the fastest-varying dimension and the
+    reduction is a vectorized dot over channels per kernel position."""
+    if use_pallas:
+        from repro.kernels.conv2d import ops as conv_ops
+
+        return conv_ops.conv2d(x, w, b, stride, padding, relu,
+                               method="basic_simd")
+    xh = nchw_to_nhwc(x)  # dimension swapping (§4.3)
+    wh = oihw_to_hwio(w)  # [kh, kw, c, oc]
+    n, h, wd, c = xh.shape
+    kh, kw, _, oc = wh.shape
+    sy, sx = stride
+    py, px = padding
+    xp = jnp.pad(xh, ((0, 0), (py, py), (px, px), (0, 0)))
+    oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
+    out = jnp.zeros((n, oh, ow, oc), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xp, (0, i, j, 0),
+                (n, i + (oh - 1) * sy + 1, j + (ow - 1) * sx + 1, c),
+                (1, sy, sx, 1),
+            )  # [n, oh, ow, c]
+            # vectorized dot over the (innermost) channel axis
+            out = out + jnp.einsum(
+                "nhwc,co->nhwo", patch.astype(jnp.float32),
+                wh[i, j].astype(jnp.float32),
+            )
+    out = out + b[None, None, None, :].astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return nhwc_to_nchw(out.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# §4.4 advanced SIMD — output-channel blocking + im2col patch reuse
+# ---------------------------------------------------------------------------
+
+
+def conv2d_advanced_simd(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
+                         block: int = 4, use_pallas=False):
+    """Each "thread" (here: matmul tile) produces `block` output channels
+    from one loaded patch — the paper's 4/8-outputs-per-thread reuse taken
+    to the MXU: im2col patches × kernel matrix, bias+ReLU fused in the
+    epilogue.  `block` is kept as the paper's parameter; on TPU the Pallas
+    kernel raises it to the 128-wide MXU tile."""
+    if use_pallas:
+        from repro.kernels.conv2d import ops as conv_ops
+
+        return conv_ops.conv2d(x, w, b, stride, padding, relu,
+                               method=f"advanced_simd_{block}")
+    xh = nchw_to_nhwc(x)
+    wh = oihw_to_hwio(w)
+    n, h, wd, c = xh.shape
+    kh, kw, _, oc = wh.shape
+    sy, sx = stride
+    py, px = padding
+    xp = jnp.pad(xh, ((0, 0), (py, py), (px, px), (0, 0)))
+    oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
+    # im2col: [n, oh, ow, kh*kw*c] — one patch load reused for all oc blocks
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(jax.lax.slice(
+                xp, (0, i, j, 0),
+                (n, i + (oh - 1) * sy + 1, j + (ow - 1) * sx + 1, c),
+                (1, sy, sx, 1),
+            ))
+    patches = jnp.concatenate(cols, axis=-1)  # [n, oh, ow, kh*kw*c]
+    wmat = wh.reshape(kh * kw * c, oc)
+    outs = []
+    for o0 in range(0, oc, block):  # output-channel blocking (§4.4)
+        blk = jnp.einsum(
+            "nhwk,ko->nhwo", patches.astype(jnp.float32),
+            wmat[:, o0 : o0 + block].astype(jnp.float32),
+        )
+        blk = blk + b[None, None, None, o0 : o0 + block].astype(jnp.float32)
+        if relu:  # fused epilogue — no extra memory pass (§4.2/Fig. 5)
+            blk = jnp.maximum(blk, 0.0)
+        outs.append(blk)
+    out = jnp.concatenate(outs, axis=-1)
+    return nhwc_to_nchw(out.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# FC ladder (§4 "fully connected layers are also accelerated")
+# ---------------------------------------------------------------------------
+
+
+def fc_seq_ref(x, w, b, relu=False):
+    """x: [N, D]; w: [D, F].  Row-by-row dot products, fp32."""
+    out = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def fc_fused(x, w, b, relu=False, use_pallas=False):
+    """Fused bias+activation matmul — the paper's FC acceleration; on TPU
+    the ``matmul_fused`` Pallas kernel."""
+    if use_pallas:
+        from repro.kernels.matmul_fused import ops as mm_ops
+
+        return mm_ops.matmul_fused(x, w, b, act="relu" if relu else "none")
+    return fc_seq_ref(x, w, b, relu)
+
+
+def conv2d(x, w, b, method: Method, stride=(1, 1), padding=(0, 0),
+           relu=False, use_pallas=False):
+    if method == Method.SEQ_REF:
+        return conv2d_seq_ref(x, w, b, stride, padding, relu)
+    if method == Method.BASIC_PARALLEL:
+        return conv2d_basic_parallel(x, w, b, stride, padding, relu, use_pallas)
+    if method == Method.BASIC_SIMD:
+        return conv2d_basic_simd(x, w, b, stride, padding, relu, use_pallas)
+    if method == Method.ADVANCED_SIMD_4:
+        return conv2d_advanced_simd(x, w, b, stride, padding, relu, 4, use_pallas)
+    if method == Method.ADVANCED_SIMD_8:
+        return conv2d_advanced_simd(x, w, b, stride, padding, relu, 8, use_pallas)
+    raise ValueError(method)

@@ -1,0 +1,7 @@
+"""Oracle for the flash-attention kernel: materialized softmax attention
+(small shapes) — shared semantics with ``repro.nn.attention``."""
+from __future__ import annotations
+
+from repro.nn.attention import reference_attention
+
+flash_attention_ref = reference_attention

@@ -1,0 +1,207 @@
+"""The CNNdroid conv ladder as Pallas TPU kernels.
+
+Three kernels, one per paper method (§4.2–§4.4), sharing the grid-over-
+frames structure (the paper launches one RenderScript kernel per frame
+batch; we launch one grid cell per frame × tile):
+
+* ``basic_parallel``  (§4.2) — NCHW, whole frame per grid cell, reduction
+  loops over (c, kh, kw) with the *spatial* map vectorized — channels are
+  NOT on the lane axis, mirroring the paper's un-swapped layout.  The MXU
+  stays idle; only the VPU spatial lanes are used.
+* ``basic_simd``      (§4.3) — NHWC after dimension swapping: channels on
+  the 128-lane minor axis; per kernel position a [oh·ow, C] × [C, OC] dot
+  — the vectorized channel dot product.
+* ``advanced_simd``   (§4.4) — NHWC + output-channel blocking: grid cell
+  (frame, oh-tile, oc-tile); an im2col patch matrix [rows, KH·KW·C] built
+  once in VMEM is reused for the whole 128-wide oc tile (the paper's
+  4/8-outputs-per-thread reuse at MXU width), with bias+ReLU fused in the
+  epilogue.
+
+VMEM budget: frames of the paper's CNNs (≤227×227×3, ≤27×27×256) fit in
+VMEM whole; block shapes keep the minor dimension lane-aligned when the
+channel count allows (ops.py pads channels — the paper's divisible-by-4
+observation at lane width 128/8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _out_size(size, k, stride, pad):
+    return (size + 2 * pad - k) // stride + 1
+
+
+# ---------------------------------------------------------------------------
+# §4.2 basic parallel — NCHW, no channel vectorization
+# ---------------------------------------------------------------------------
+
+
+def _basic_parallel_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
+                           relu):
+    # x_ref: [C, H, W]; w_ref: [OC, C, KH, KW]; o_ref: [OC, OH, OW]
+    oc, ohh, oww = o_ref.shape
+    c = x_ref.shape[0]
+    acc = jnp.zeros((oc, ohh, oww), jnp.float32)
+    for ci in range(c):  # channels OUTER (un-swapped layout: no lane reuse)
+        plane = x_ref[ci]  # [H, W]
+        for i in range(kh):
+            for j in range(kw):
+                patch = jax.lax.slice(
+                    plane, (i, j),
+                    (i + (ohh - 1) * sy + 1, j + (oww - 1) * sx + 1),
+                    (sy, sx),
+                )  # [OH, OW] — spatial lanes only
+                acc = acc + (patch.astype(jnp.float32)[None] *
+                             w_ref[:, ci, i, j].astype(jnp.float32)
+                             [:, None, None])
+    acc = acc + b_ref[...].astype(jnp.float32)[:, None, None]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def conv2d_basic_parallel(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
+                          interpret: bool = False):
+    n, c, h, wd = x.shape
+    oc, _, kh, kw = w.shape
+    sy, sx = stride
+    py, px = padding
+    xp = jnp.pad(x, ((0, 0), (0, 0), (py, py), (px, px)))
+    oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
+    hp, wp = xp.shape[2], xp.shape[3]
+    kern = functools.partial(_basic_parallel_kernel, kh=kh, kw=kw, sy=sy,
+                             sx=sx, relu=relu)
+    return pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((None, c, hp, wp), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((oc, c, kh, kw), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((oc,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, oc, oh, ow), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oc, oh, ow), x.dtype),
+        interpret=interpret,
+    )(xp, w, b)
+
+
+# ---------------------------------------------------------------------------
+# §4.3 basic SIMD — NHWC, vectorized channel dot per kernel position
+# ---------------------------------------------------------------------------
+
+
+def _basic_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx, relu):
+    # x_ref: [HP, WP, C]; w_ref: [KH, KW, C, OC]; o_ref: [OH, OW, OC]
+    ohh, oww, oc = o_ref.shape
+    acc = jnp.zeros((ohh * oww, oc), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x_ref[...], (i, j, 0),
+                (i + (ohh - 1) * sy + 1, j + (oww - 1) * sx + 1,
+                 x_ref.shape[2]),
+                (sy, sx, 1),
+            ).reshape(ohh * oww, -1)  # [rows, C] — C on the lane axis
+            acc = acc + jnp.dot(
+                patch.astype(jnp.float32),
+                w_ref[i, j].astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )  # vectorized dot over channels (the paper's 4-wide, here 128)
+    acc = acc + b_ref[...].astype(jnp.float32)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.reshape(ohh, oww, oc).astype(o_ref.dtype)
+
+
+def conv2d_basic_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
+                      relu=False, interpret: bool = False):
+    n, h, wd, c = x_nhwc.shape
+    kh, kw, _, oc = w_hwio.shape
+    sy, sx = stride
+    py, px = padding
+    xp = jnp.pad(x_nhwc, ((0, 0), (py, py), (px, px), (0, 0)))
+    oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
+    hp, wp = xp.shape[1], xp.shape[2]
+    kern = functools.partial(_basic_simd_kernel, kh=kh, kw=kw, sy=sy, sx=sx,
+                             relu=relu)
+    return pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((None, hp, wp, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c, oc), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((oc,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, oh, ow, oc), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, oc), x_nhwc.dtype),
+        interpret=interpret,
+    )(xp, w_hwio, b)
+
+
+# ---------------------------------------------------------------------------
+# §4.4 advanced SIMD — im2col in VMEM + output-channel blocking + epilogue
+# ---------------------------------------------------------------------------
+
+
+def _advanced_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
+                          relu):
+    # x_ref: [HP, WP, C] (frame); w_ref: [KH*KW*C, OC_BLK]; o_ref: [OH, OW, OC_BLK]
+    ohh, oww, ocb = o_ref.shape
+    cols = []
+    for i in range(kh):  # im2col built once per frame tile, reused for the
+        for j in range(kw):  # whole 128-wide output-channel block (§4.4)
+            cols.append(jax.lax.slice(
+                x_ref[...], (i, j, 0),
+                (i + (ohh - 1) * sy + 1, j + (oww - 1) * sx + 1,
+                 x_ref.shape[2]),
+                (sy, sx, 1),
+            ).reshape(ohh * oww, -1))
+    patches = jnp.concatenate(cols, axis=-1)  # [rows, KH*KW*C]
+    acc = jnp.dot(patches.astype(jnp.float32), w_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)  # one MXU matmul
+    acc = acc + b_ref[...].astype(jnp.float32)
+    if relu:  # fused epilogue in VMEM — zero-cost ReLU (Fig. 5)
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.reshape(ohh, oww, ocb).astype(o_ref.dtype)
+
+
+def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
+                         relu=False, oc_block: int = 128,
+                         interpret: bool = False):
+    n, h, wd, c = x_nhwc.shape
+    kh, kw, _, oc = w_hwio.shape
+    sy, sx = stride
+    py, px = padding
+    xp = jnp.pad(x_nhwc, ((0, 0), (py, py), (px, px), (0, 0)))
+    oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
+    hp, wp = xp.shape[1], xp.shape[2]
+    ocb = min(oc_block, oc)
+    pad_oc = (-oc) % ocb
+    wmat = w_hwio.reshape(kh * kw * c, oc)
+    if pad_oc:
+        wmat = jnp.pad(wmat, ((0, 0), (0, pad_oc)))
+        b = jnp.pad(b, (0, pad_oc))
+    ocp = oc + pad_oc
+    kern = functools.partial(_advanced_simd_kernel, kh=kh, kw=kw, sy=sy,
+                             sx=sx, relu=relu)
+    out = pl.pallas_call(
+        kern,
+        grid=(n, ocp // ocb),
+        in_specs=[
+            pl.BlockSpec((None, hp, wp, c), lambda i, o: (i, 0, 0, 0)),
+            pl.BlockSpec((kh * kw * c, ocb), lambda i, o: (0, o)),
+            pl.BlockSpec((ocb,), lambda i, o: (o,)),
+        ],
+        out_specs=pl.BlockSpec((None, oh, ow, ocb), lambda i, o: (i, 0, 0, o)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, ocp), x_nhwc.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(xp, wmat, b)
+    return out[..., :oc]

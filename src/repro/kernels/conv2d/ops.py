@@ -1,0 +1,56 @@
+"""jit'd public wrapper for the conv2d kernel ladder.
+
+Accepts NCHW/OIHW (the deploy format), performs the dimension swap +
+channel padding host-side (the Fig. 5 "CPU idle time" work), dispatches to
+the method's Pallas kernel, and swaps back.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import (
+    nchw_to_nhwc,
+    nhwc_to_nchw,
+    oihw_to_hwio,
+    pad_axis,
+)
+from repro.kernels.conv2d import kernels as K
+from repro.kernels.conv2d.ref import conv2d_ref
+
+SUBLANES = 8  # channel padding multiple (paper's "divisible by 4", on TPU 8/128)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("stride", "padding", "relu", "method",
+                                   "interpret"))
+def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
+           method: str = "advanced_simd_128", interpret: bool = None):
+    """x: [N, C, H, W]; w: [OC, C, KH, KW]; b: [OC]."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    if method == "basic_parallel":
+        return K.conv2d_basic_parallel(x, w, b, stride, padding, relu,
+                                       interpret=interp)
+    # SIMD methods: dimension swapping + channel padding (§4.3)
+    xh = nchw_to_nhwc(x)
+    wh = oihw_to_hwio(w)
+    xh, _ = pad_axis(xh, 3, SUBLANES)
+    wh, _ = pad_axis(wh, 2, SUBLANES)
+    if method == "basic_simd":
+        out = K.conv2d_basic_simd(xh, wh, b, stride, padding, relu,
+                                  interpret=interp)
+    elif method.startswith("advanced_simd"):
+        blk = int(method.rsplit("_", 1)[1]) if method[-1].isdigit() else 128
+        out = K.conv2d_advanced_simd(xh, wh, b, stride, padding, relu,
+                                     oc_block=blk, interpret=interp)
+    else:
+        raise ValueError(method)
+    return nhwc_to_nchw(out)
+
+
+conv2d_reference = conv2d_ref

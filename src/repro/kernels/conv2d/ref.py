@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the conv2d kernel ladder.
+
+Direct NCHW convolution via explicit kernel-position accumulation (no
+lax.conv), fp32 accumulation — the §4.1 sequential semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, b, stride=(1, 1), padding=(0, 0), relu=False):
+    """x: [N, C, H, W]; w: [OC, C, KH, KW]; b: [OC] -> [N, OC, OH, OW]."""
+    n, c, h, wd = x.shape
+    oc, _, kh, kw = w.shape
+    sy, sx = stride
+    py, px = padding
+    xp = jnp.pad(x, ((0, 0), (0, 0), (py, py), (px, px)))
+    oh = (h + 2 * py - kh) // sy + 1
+    ow = (wd + 2 * px - kw) // sx + 1
+    out = jnp.zeros((n, oc, oh, ow), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xp, (0, 0, i, j),
+                (n, c, i + (oh - 1) * sy + 1, j + (ow - 1) * sx + 1),
+                (1, 1, sy, sx),
+            )
+            out = out + jnp.einsum(
+                "nchw,oc->nohw", patch.astype(jnp.float32),
+                w[:, :, i, j].astype(jnp.float32),
+            )
+    out = out + b[None, :, None, None].astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused bias+activation matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_ACTS = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": lambda x: x * (1.0 / (1.0 + jnp.exp(-x))),
+    "gelu": lambda x: 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 *
+                                                (x + 0.044715 * x ** 3))),
+    "none": lambda x: x,
+}
+
+
+def matmul_fused_ref(x, w, b=None, act: str = "none"):
+    """y = act(x @ w + b) with fp32 accumulation.  x: [M, K]; w: [K, N]."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return _ACTS[act](y).astype(x.dtype)

@@ -1,0 +1,19 @@
+"""jit'd wrapper for the WKV6 chunked kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.wkv6.kernel import wkv6_pallas
+from repro.kernels.wkv6.ref import wkv6_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, logw, u, chunk: int = 32, interpret: bool = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return wkv6_pallas(r, k, v, logw, u, chunk=chunk, interpret=interp)

@@ -1,0 +1,7 @@
+"""Oracle for the WKV6 kernel: the per-timestep recurrence from
+``repro.nn.rwkv`` (fp32)."""
+from __future__ import annotations
+
+from repro.nn.rwkv import wkv6_reference
+
+__all__ = ["wkv6_reference"]

@@ -1,0 +1,306 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # XLA:CPU float-normalization + while-loop LICM hoists bf16->f32
+    # converts of whole scan-saved stacks (params included) out of loops,
+    # inflating per-device memory ~3x with fp32 copies that do not exist on
+    # TPU (native bf16).  Disabling LICM keeps the CPU lowering's memory
+    # profile representative of the TPU target (EXPERIMENTS.md §Dry-run).
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers, compiles, fits, and report its cost terms.
+
+For each combination this lowers the right step function —
+``train_step`` (train_4k), ``prefill`` (prefill_32k) or ``serve_step``
+(decode_32k / long_500k) — against ShapeDtypeStruct stand-ins with the
+production shardings, compiles it, and records:
+
+* ``compiled.memory_analysis()``  — proves the working set fits 16 GB/chip;
+* ``compiled.cost_analysis()``    — XLA's own numbers (while-body counted
+  once — kept for reference);
+* trip-count-corrected FLOPs / bytes / collective bytes from the
+  post-optimization HLO (repro.launch.hlo_analysis) — the numbers the
+  roofline in EXPERIMENTS.md §Roofline uses.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k \
+      [--multi-pod] [--out results/dryrun] [--all] [--skip-existing]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+
+def _build_step(cfg, shape, mesh_cfg, rules, mb_override=None):
+    """Returns (fn, arg_specs) ready for jit(fn).lower(*arg_specs)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+
+    from repro.core.config import TrainConfig
+    from repro.launch.inputs import input_specs, cache_specs
+    from repro.models.registry import get_model
+    from repro.nn.param import axes_tree, is_param
+    from repro.sharding.rules import logical_to_spec
+    from repro.train.optimizer import adamw_init_spec
+    from repro.train.step import make_train_step
+
+    from repro.sharding.ctx import activation_sharding
+
+    model = get_model(cfg)
+    dp = mesh_cfg.dp_size
+    mesh_axes = mesh_cfg.axes
+    window = model.effective_window(shape)
+
+    def with_act_ctx(f):
+        """Trace `f` under the activation-sharding context so every
+        shard_act() in model code becomes a with_sharding_constraint."""
+        def g(*a, **kw):
+            with activation_sharding(mesh_axes, rules):
+                return f(*a, **kw)
+        return g
+
+    def shard(axes):
+        return logical_to_spec(axes, mesh_axes, rules)
+
+    def tree_sds(spec_tree, mesh):
+        def leaf(p):
+            return jax.ShapeDtypeStruct(
+                p.shape, jnp.dtype(p.dtype or cfg.param_dtype),
+                sharding=NamedSharding(mesh, shard(p.axes)),
+            )
+        return jax.tree_util.tree_map(leaf, spec_tree, is_leaf=is_param)
+
+    def batch_sds(specs, axes, mesh):
+        return {
+            k: jax.ShapeDtypeStruct(
+                v.shape, v.dtype,
+                sharding=NamedSharding(mesh, shard(axes[k])),
+            )
+            for k, v in specs.items()
+        }
+
+    def build(mesh):
+        param_spec = model.param_spec()
+        params = tree_sds(param_spec, mesh)
+        b_specs, b_axes = input_specs(cfg, shape)
+        batch = batch_sds(b_specs, b_axes, mesh)
+
+        if shape.kind == "train":
+            from repro.train.step import default_microbatches
+
+            tcfg = TrainConfig()
+            fsdp = dict(rules.table).get("embed") is not None
+            # >100B params: bf16 optimizer state + grad accumulation, the
+            # documented large-model configuration (EXPERIMENTS.md §Dry-run)
+            big = cfg.num_params() > 100e9
+            opt_spec = adamw_init_spec(
+                param_spec, zero1=True, dp_size=dp, fsdp=fsdp,
+                moment_dtype="bfloat16" if big else "float32")
+            opt = tree_sds(opt_spec, mesh)
+            # media-token activations make VLM/audio steps heavier per token
+            mlt = 4096 if cfg.family in ("vlm", "audio") else 8192
+            mb = mb_override or default_microbatches(
+                shape.global_batch * shape.seq_len, dp, max_local_tokens=mlt)
+            step = make_train_step(
+                model, tcfg, dp_size=dp, window_override=window,
+                microbatches=mb,
+                grad_acc_dtype="bfloat16" if big else "float32")
+            return with_act_ctx(step), (params, opt, batch), (0, 1)
+
+        if shape.kind == "prefill":
+            c_sds_spec = model.cache_spec(shape.global_batch, shape.seq_len,
+                                          window)
+            cache = tree_sds(c_sds_spec, mesh)
+
+            def prefill(params, batch, cache):
+                return model.forward(params, batch, mode="prefill",
+                                     dp_size=dp, window_override=window,
+                                     cache=cache)
+
+            return with_act_ctx(prefill), (params, batch, cache), (2,)
+
+        # decode
+        c_sds_spec = model.cache_spec(shape.global_batch, shape.seq_len,
+                                      window)
+        cache = tree_sds(c_sds_spec, mesh)
+
+        def serve_step(params, tokens, positions, cache):
+            return model.decode_step(params, tokens, positions, cache,
+                                     window=window, dp_size=dp)
+
+        return with_act_ctx(serve_step), (params, batch["tokens"],
+                                          batch["positions"], cache), (3,)
+
+    return build
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+            save_hlo: bool = False, variants=()) -> dict:
+    import jax
+
+    from repro.core.config import get_arch, get_shape
+    from repro.launch.hlo_analysis import analyze_hlo_text
+    from repro.launch.mesh import make_production_mesh, mesh_config
+    from repro.sharding.auto import rules_for
+
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh_cfg = mesh_config(multi_pod)
+    if shape.is_decode and not cfg.is_attention_free:
+        # bf16 KV cache footprint per device; >8 GB -> int8 KV (documented
+        # beyond-paper serving optimization, EXPERIMENTS.md SPerf)
+        win = cfg.sliding_window or (cfg.long_context_window
+                                     if shape.seq_len > 131_072 else 0)
+        s_eff = min(shape.seq_len, win) if win else shape.seq_len
+        n_attn = (cfg.num_layers if cfg.shared_attn_every == 0
+                  else cfg.num_layers // cfg.shared_attn_every)
+        cache_bytes = (2 * n_attn * shape.global_batch * s_eff
+                       * cfg.num_kv_heads * cfg.head_dim * 2)
+        if cache_bytes / mesh_cfg.num_devices > 8 * 2**30:
+            cfg = dataclasses.replace(cfg, kv_quant=True)
+    mb_override = None
+    vnotes = []
+    if variants:
+        # phase 1: config transforms BEFORE rules_for so the divisibility
+        # policies see the transformed architecture (e.g. padded heads)
+        from repro.launch.variants import apply_variants
+        from repro.sharding.rules import DEFAULT_RULES
+
+        cfg, _, vnotes, mb_override = apply_variants(
+            variants, cfg, DEFAULT_RULES, mesh_cfg.model_size)
+    rules, notes = rules_for(cfg, mesh_cfg, shape)
+    if variants:
+        # phase 2: rule-only overrides on the derived rules (e.g. seq_sp)
+        from repro.launch.variants import apply_variants as _av
+
+        _, rules, _, _ = _av(variants, cfg, rules, mesh_cfg.model_size)
+    notes = notes + vnotes
+    if cfg.kv_quant:
+        notes = notes + ["int8 KV cache"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh_cfg.shape)),
+        "num_devices": mesh_cfg.num_devices,
+        "sharding_notes": notes,
+        "variants": list(variants),
+        "status": "error",
+    }
+    t0 = time.time()
+    try:
+        build = _build_step(cfg, shape, mesh_cfg, rules,
+                            mb_override=mb_override)
+        fn, args, donate = build(mesh)
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)
+        }
+        args_b = rec["memory"].get("argument_size_in_bytes", 0)
+        alias_b = rec["memory"].get("alias_size_in_bytes", 0)
+        temp_b = rec["memory"].get("temp_size_in_bytes", 0)
+        out_b = rec["memory"].get("output_size_in_bytes", 0)
+        rec["memory"]["per_device_total_bytes"] = (
+            args_b + temp_b + out_b - alias_b
+        )
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
+        }
+        hlo_text = compiled.as_text()
+        costs = analyze_hlo_text(hlo_text)
+        rec["hlo"] = costs.to_dict()
+        rec["hlo"]["note"] = "per-device; trip-count-corrected"
+        if save_hlo:
+            hlo_path = out_dir / f"{arch}__{shape_name}__{rec['mesh']}.hlo"
+            hlo_path.write_text(hlo_text)
+            rec["hlo_path"] = str(hlo_path)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep all (arch, shape) pairs for the chosen mesh")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="'+'-separated variant chain, e.g. head_pad+int8kv")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    from repro.core.config import SHAPES, list_archs
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    combos = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        combos.append((args.arch, args.shape))
+
+    variants = tuple(v for v in args.variant.split("+") if v)
+    vtag = ("__v-" + "-".join(variants)) if variants else ""
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    for arch, shape in combos:
+        path = out_dir / f"{arch}__{shape}__{mesh_tag}{vtag}.json"
+        if args.skip_existing and path.exists():
+            try:
+                if json.loads(path.read_text()).get("status") == "ok":
+                    print(f"[skip] {arch} {shape} {mesh_tag}")
+                    continue
+            except Exception:
+                pass
+        print(f"[run ] {arch} {shape} {mesh_tag}", flush=True)
+        rec = run_one(arch, shape, args.multi_pod, out_dir,
+                      save_hlo=args.save_hlo, variants=variants)
+        path.write_text(json.dumps(rec, indent=2))
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            per_dev = rec["memory"].get("per_device_total_bytes", 0)
+            extra = (f" mem/dev={per_dev/2**30:.2f}GiB"
+                     f" flops/dev={rec['hlo']['flops']:.3e}"
+                     f" coll/dev={rec['hlo']['collective_bytes_total']:.3e}")
+        else:
+            extra = " " + rec.get("error", "")[:200]
+        print(f"[done] {arch} {shape} {mesh_tag}: {status}"
+              f" ({rec['total_s']}s){extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

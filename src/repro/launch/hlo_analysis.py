@@ -1,0 +1,364 @@
+"""Post-optimization HLO analysis: FLOPs, HBM bytes, collective bytes.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis visits a
+``while`` body ONCE, so a 64-layer ``lax.scan`` model is undercounted 64×
+(verified empirically — see EXPERIMENTS.md §Dry-run).  This module parses
+``compiled.as_text()`` and multiplies every computation's costs by its
+loop trip count (read from the ``known_trip_count`` backend config, falling
+back to the loop-condition constant).
+
+Costs:
+* flops — 2·B·M·N·K per dot (parsed from operand shapes + contracting/batch
+  dims); 1 flop/element for top-level elementwise arithmetic.
+* bytes — operand + result bytes of instructions at "real" computation
+  level (entry / while bodies / called computations).  Fusion internals are
+  not counted (a fusion's operands/results approximate its HBM traffic),
+  matching the semantics of XLA's bytes-accessed.
+* collectives — result bytes per op kind (all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute), trip-multiplied.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[^\s=]+)\s*=\s*(?P<type>.+?)"
+    r"\s(?P<op>[a-z][a-z0-9\-]*)\((?P<rest>.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+\((?P<params>.*)\)\s+->")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes appearing in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _split_top(s: str) -> List[str]:
+    """Split on top-level commas (balanced parens/braces/brackets)."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+def _balanced_args(rest: str) -> Tuple[str, str]:
+    """rest starts after the opening '(' of op(...).  Returns (args, attrs)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    type_str: str
+    args: str
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, str] = field(default_factory=dict)  # name -> type str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # instr -> type str
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith(("//", "HloModule")):
+            continue
+        if stripped.endswith("{") and ("=" not in stripped.split("(")[0]):
+            m = _COMP_RE.match(stripped)
+            if m:
+                cur = Computation(m.group("name"))
+                comps[cur.name] = cur
+                for p in _split_top(m.group("params")):
+                    if ":" in p:
+                        pname, ptype = p.split(":", 1)
+                        cur.params[pname.strip().lstrip("%")] = ptype.strip()
+                        cur.shapes[pname.strip().lstrip("%")] = ptype.strip()
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(stripped)
+        if not m:
+            continue
+        args, attrs = _balanced_args(m.group("rest"))
+        ins = Instr(m.group("name"), m.group("op"), m.group("type"), args, attrs)
+        cur.instrs.append(ins)
+        cur.shapes[ins.name] = ins.type_str
+    return comps
+
+
+def _operand_names(args: str) -> List[str]:
+    return [a.lstrip("%") for a in re.findall(r"%([\w.\-]+)", args)]
+
+
+def _dims_attr(attrs: str, key: str) -> List[int]:
+    m = re.search(key + r"=\{([\d,]*)\}", attrs)
+    if not m:
+        return []
+    return [int(x) for x in m.group(1).split(",") if x]
+
+
+def _trip_count(ins: Instr, comps: Dict[str, Computation]) -> int:
+    m = re.search(r'known_trip_count[^0-9]*(\d+)', ins.attrs)
+    if m:
+        return int(m.group(1))
+    # fallback: largest integer constant in the condition computation
+    m = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+    if m and m.group(1) in comps:
+        best = 1
+        for i in comps[m.group(1)].instrs:
+            c = re.match(r"constant\((\d+)\)", i.op + "(" + i.args + ")")
+            cm = re.search(r"constant\((\d+)\)", "constant(" + i.args + ")") \
+                if i.op == "constant" else None
+            if cm:
+                best = max(best, int(cm.group(1)))
+        return best
+    return 1
+
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "negate",
+    "abs", "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "select",
+    "compare", "and", "or", "not", "floor", "ceil", "sign", "cosine", "sine",
+    "clamp", "convert", "reduce", "reduce-window",
+}
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    ops = _operand_names(ins.args)
+    if len(ops) < 2:
+        return 0.0
+    lhs = _shape_dims(shapes.get(ops[0], ""))
+    rhs = _shape_dims(shapes.get(ops[1], ""))
+    out = _shape_dims(ins.type_str)
+    if lhs is None or rhs is None or out is None:
+        return 0.0
+    lc = _dims_attr(ins.attrs, "lhs_contracting_dims")
+    k = 1
+    for d in lc:
+        if d < len(lhs[1]):
+            k *= lhs[1][d]
+    out_n = 1
+    for d in out[1]:
+        out_n *= d
+    return 2.0 * out_n * max(k, 1)
+
+
+def _conv_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    ops = _operand_names(ins.args)
+    if len(ops) < 2:
+        return 0.0
+    rhs = _shape_dims(shapes.get(ops[1], ""))
+    out = _shape_dims(ins.type_str)
+    if rhs is None or out is None:
+        return 0.0
+    out_n = 1
+    for d in out[1]:
+        out_n *= d
+    kernel_n = 1
+    for d in rhs[1]:
+        kernel_n *= d
+    # per output element: kernel spatial*in_ch MACs ~= kernel_n / out_channels
+    # (approximation: assumes standard dim ordering)
+    oc = out[1][-1] if out[1] else 1
+    return 2.0 * out_n * max(kernel_n // max(oc, 1), 1)
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    def scaled(self, k: float) -> "HloCosts":
+        out = HloCosts(self.flops * k, self.bytes * k)
+        for t, v in self.coll_bytes.items():
+            out.coll_bytes[t] = v * k
+        for t, v in self.coll_count.items():
+            out.coll_count[t] = int(v * k)
+        return out
+
+    def add(self, other: "HloCosts") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for t, v in other.coll_bytes.items():
+            self.coll_bytes[t] += v
+        for t, v in other.coll_count.items():
+            self.coll_count[t] += v
+
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": dict(self.coll_bytes),
+            "collective_count": dict(self.coll_count),
+            "collective_bytes_total": self.total_coll_bytes(),
+        }
+
+
+def _flops_only(comp: Computation, comps, memo) -> float:
+    """FLOPs inside fusion computations (dots are rare there but possible)."""
+    key = ("f", comp.name)
+    if key in memo:
+        return memo[key]
+    total = 0.0
+    for ins in comp.instrs:
+        if ins.op == "dot":
+            total += _dot_flops(ins, comp.shapes)
+        elif ins.op == "convolution":
+            total += _conv_flops(ins, comp.shapes)
+        elif ins.op in _ELEMENTWISE:
+            total += shape_bytes(ins.type_str) / max(
+                DTYPE_BYTES.get((_shape_dims(ins.type_str) or ("f32",))[0], 4), 1
+            )
+        elif ins.op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+            if m and m.group(1) in comps:
+                total += _flops_only(comps[m.group(1)], comps, memo)
+    memo[key] = total
+    return total
+
+
+def analyze_computation(
+    comp: Computation, comps: Dict[str, Computation], memo=None
+) -> HloCosts:
+    memo = {} if memo is None else memo
+    key = ("c", comp.name)
+    if key in memo:
+        return memo[key]
+    costs = HloCosts()
+    for ins in comp.instrs:
+        if ins.op == "while":
+            m = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+            trip = _trip_count(ins, comps)
+            if m and m.group(1) in comps:
+                body = analyze_computation(comps[m.group(1)], comps, memo)
+                costs.add(body.scaled(trip))
+        elif ins.op in ("call", "conditional", "async-start"):
+            for m in re.finditer(
+                r"(?:to_apply|calls|branch_computations=\{[^}]*|called_computations=\{[^}]*)"
+                r"=?%?([\w.\-]+)", ins.attrs
+            ):
+                if m.group(1) in comps:
+                    costs.add(analyze_computation(comps[m.group(1)], comps, memo))
+        elif ins.op in COLLECTIVES or any(
+            ins.op.startswith(c) for c in COLLECTIVES
+        ):
+            kind = next(c for c in COLLECTIVES if ins.op.startswith(c))
+            b = shape_bytes(ins.type_str)
+            costs.coll_bytes[kind] += b
+            costs.coll_count[kind] += 1
+            costs.bytes += 2 * b
+        elif ins.op == "fusion":
+            costs.bytes += shape_bytes(ins.type_str)
+            for o in _operand_names(ins.args):
+                costs.bytes += shape_bytes(comp.shapes.get(o, ""))
+            m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+            if m and m.group(1) in comps:
+                costs.flops += _flops_only(comps[m.group(1)], comps, memo)
+        elif ins.op == "dot":
+            costs.flops += _dot_flops(ins, comp.shapes)
+            costs.bytes += shape_bytes(ins.type_str)
+            for o in _operand_names(ins.args):
+                costs.bytes += shape_bytes(comp.shapes.get(o, ""))
+        elif ins.op == "convolution":
+            costs.flops += _conv_flops(ins, comp.shapes)
+            costs.bytes += shape_bytes(ins.type_str)
+        elif ins.op in ("copy", "transpose", "reshape", "broadcast", "concatenate",
+                        "slice", "dynamic-slice", "dynamic-update-slice", "gather",
+                        "scatter", "sort", "iota", "pad", "reverse", "custom-call",
+                        "bitcast", "tuple", "get-tuple-element", "parameter",
+                        "constant", "rng", "partition-id", "replica-id"):
+            if ins.op in ("bitcast", "tuple", "get-tuple-element", "parameter",
+                          "constant", "iota", "partition-id", "replica-id"):
+                continue  # no HBM traffic
+            costs.bytes += shape_bytes(ins.type_str)
+            for o in _operand_names(ins.args):
+                costs.bytes += shape_bytes(comp.shapes.get(o, ""))
+        elif ins.op in _ELEMENTWISE:
+            n = shape_bytes(ins.type_str)
+            costs.flops += n / max(
+                DTYPE_BYTES.get((_shape_dims(ins.type_str) or ("f32",))[0], 4), 1
+            )
+            costs.bytes += 2 * n
+    memo[key] = costs
+    return costs
+
+
+def analyze_hlo_text(text: str) -> HloCosts:
+    comps = parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                entry = m.group("name")
+            break
+    if entry is None or entry not in comps:
+        # fall back: computation with most instructions
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    return analyze_computation(comps[entry], comps)

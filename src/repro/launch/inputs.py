@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every model input.
+
+``input_specs(cfg, shape)`` returns (tree of jax.ShapeDtypeStruct, tree of
+logical axes) for the batch of the given input shape — weak-type-correct,
+shardable, and allocation-free.  The dry-run attaches NamedShardings from
+the per-(arch, mesh, shape) rules; smoke tests materialize them with zeros.
+
+Decode shapes describe ``serve_step`` inputs: ONE new token per request
+plus the KV cache of ``seq_len``; train/prefill describe the full batch.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, ShapeConfig
+from repro.models.registry import get_model
+from repro.nn.param import axes_tree, is_param, Param
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _media_specs(cfg: ModelConfig, b: int):
+    """Stub modality frontend outputs (DESIGN.md §7): patch/frame embeddings
+    of the right shape, as if produced by the ViT / conv feature extractor."""
+    specs, axes = {}, {}
+    if cfg.family == "vlm":
+        t, dm = cfg.cross_attn.num_media_tokens, cfg.cross_attn.media_dim
+        specs["media_embeds"] = _sds((b, t, dm), cfg.dtype)
+        axes["media_embeds"] = ("batch", "media", None)
+    if cfg.family == "audio":
+        t, dm = cfg.cross_attn.num_media_tokens, cfg.cross_attn.media_dim
+        specs["frames"] = _sds((b, t, dm), cfg.dtype)
+        axes["frames"] = ("batch", "media", None)
+    return specs, axes
+
+
+def cache_specs(model, batch: int, cache_len: int, window: int):
+    spec = model.cache_spec(batch, cache_len, window)
+    sds = jax.tree_util.tree_map(
+        lambda p: _sds(p.shape, p.dtype or "bfloat16"), spec,
+        is_leaf=is_param,
+    )
+    return sds, axes_tree(spec)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[dict, dict]:
+    """Batch-side inputs only (params/opt/cache handled by the dry-run)."""
+    b, s = shape.global_batch, shape.seq_len
+    model = get_model(cfg)
+    if shape.kind == "train":
+        specs = {
+            "tokens": _sds((b, s), "int32"),
+            "labels": _sds((b, s), "int32"),
+        }
+        axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    elif shape.kind == "prefill":
+        specs = {"tokens": _sds((b, s), "int32")}
+        axes = {"tokens": ("batch", "seq")}
+    else:  # decode: ONE new token per request
+        specs = {
+            "tokens": _sds((b, 1), "int32"),
+            "positions": _sds((b,), "int32"),
+        }
+        axes = {"tokens": ("batch", None), "positions": ("batch",)}
+    m_specs, m_axes = _media_specs(cfg, b)
+    specs.update(m_specs)
+    axes.update(m_axes)
+    return specs, axes

@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state.  The single-pod mesh is
+16×16 = 256 chips (data × model); the multi-pod mesh is 2×16×16 = 512 chips
+(pod × data × model) where the leading axis crosses the slower inter-pod
+links — the batch shards over ("pod","data") so only data-parallel gradient
+all-reduces cross pods.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.config import MeshConfig, SINGLE_POD, MULTI_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} — "
+            "the dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import"
+        )
+    import numpy as np
+
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def mesh_config(multi_pod: bool = False) -> MeshConfig:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_test_mesh():
+    """1×1 mesh over the single CPU device — used by smoke/integration tests
+    so the same sharded code paths run unmodified."""
+    import numpy as np
+
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(dev, ("data", "model"))

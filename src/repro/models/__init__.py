@@ -1,0 +1,3 @@
+from repro.models.registry import get_model, analytic_param_count
+
+__all__ = ["get_model", "analytic_param_count"]

@@ -1,0 +1,169 @@
+"""Encoder-decoder transformer (SeamlessM4T-v2 text/speech backbone).
+
+The modality frontend (mel-spectrogram + conv feature extractor) is a STUB
+per the assignment carve-out: ``batch["frames"]`` carries precomputed frame
+embeddings [b, n_frames, media_dim].  The encoder is bidirectional; the
+decoder interleaves causal self-attention, cross-attention to the encoder
+output, and an MLP.  Cross K/V are computed once per sequence and cached.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.nn.attention import (
+    attention_spec,
+    attention_apply,
+    cross_kv,
+    cross_attention_cached,
+)
+from repro.nn.embedding import embedding_spec, embed_tokens, lm_logits
+from repro.nn.linear import linear_spec, dense
+from repro.nn.mlp import mlp_spec, mlp_apply
+from repro.nn.param import Param, stack_spec
+from repro.models.common import (
+    BaseModel,
+    block_spec,
+    block_apply,
+    kv_cache_param,
+    norm_spec,
+    norm_apply,
+    scan_layers,
+)
+from repro.models.vision_lm import stack_cache
+
+
+class EncDecLM(BaseModel):
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        assert cfg.num_encoder_layers > 0
+
+    def _dec_unit(self) -> dict:
+        cfg = self.cfg
+        return {
+            "ln_self": norm_spec(cfg),
+            "self": attention_spec(cfg),
+            "ln_cross": norm_spec(cfg),
+            "cross": attention_spec(cfg, cross=True),
+            "ln_mlp": norm_spec(cfg),
+            "mlp": mlp_spec(cfg),
+        }
+
+    def param_spec(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": embedding_spec(cfg),
+            "frontend": linear_spec(cfg.cross_attn.media_dim, cfg.d_model,
+                                    "media", "embed", bias=True),
+            "encoder": stack_spec(block_spec(cfg), cfg.num_encoder_layers),
+            "ln_enc": norm_spec(cfg),
+            "decoder": stack_spec(self._dec_unit(), cfg.num_layers),
+            "ln_f": norm_spec(cfg),
+        }
+
+    # -- encoder -----------------------------------------------------------------
+    def encode(self, params, frames, mode: str = "train"):
+        cfg = self.cfg
+        x = dense(params["frontend"], frames)
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def body(xc, p_i, c_i):
+            xc, _, _ = block_apply(p_i, xc, cfg, positions=positions,
+                                   mode="full", cache=None)
+            return xc, c_i, {}
+
+        # bidirectional: causal=False is routed via window=0 + causal flag
+        def body_bi(xc, p_i, c_i):
+            h = norm_apply(p_i["ln_attn"], xc, cfg)
+            a, _ = attention_apply(p_i["attn"], h, cfg, causal=False,
+                                   positions=positions, mode="full")
+            xc = xc + a
+            h = norm_apply(p_i["ln_mlp"], xc, cfg)
+            xc = xc + mlp_apply(p_i["mlp"], h, cfg)
+            return xc, c_i, {}
+
+        remat = "full" if mode == "train" else "none"
+        x, _, _ = scan_layers(body_bi, x, params["encoder"], remat=remat)
+        return norm_apply(params["ln_enc"], x, cfg)
+
+    # -- decoder -----------------------------------------------------------------
+    def _dec_body(self, enc_out, positions, window, mode, use_cross_cache):
+        cfg = self.cfg
+
+        def body(xc, p_i, c_i):
+            has_cache = isinstance(c_i, dict)
+            h = norm_apply(p_i["ln_self"], xc, cfg)
+            a, nc_self = attention_apply(
+                p_i["self"], h, cfg, window=window, positions=positions,
+                mode=mode, cache=c_i["self"] if has_cache else None)
+            xc = xc + a
+            h = norm_apply(p_i["ln_cross"], xc, cfg)
+            if use_cross_cache:
+                a = cross_attention_cached(p_i["cross"], h, c_i["cross"]["k"],
+                                           c_i["cross"]["v"], cfg)
+                nc_cross = c_i["cross"]
+            else:
+                a, _ = attention_apply(p_i["cross"], h, cfg, context=enc_out,
+                                       mode="full")
+                nc_cross = None
+                if has_cache:
+                    ck, cv = cross_kv(p_i["cross"], enc_out, cfg)
+                    nc_cross = {"k": ck.astype(jnp.bfloat16),
+                                "v": cv.astype(jnp.bfloat16)}
+            xc = xc + a
+            h = norm_apply(p_i["ln_mlp"], xc, cfg)
+            xc = xc + mlp_apply(p_i["mlp"], h, cfg)
+            ncache = {"self": nc_self, "cross": nc_cross} if has_cache else c_i
+            return xc, ncache, {}
+
+        return body
+
+    # -- public API -----------------------------------------------------------------
+    def forward(self, params, batch, mode: str = "train", *, dp_size: int = 1,
+                window_override: int = 0, cache=None, use_pallas: bool = False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.arange(s)[None, :]
+        enc_out = self.encode(params, batch["frames"], mode)
+        x = embed_tokens(params["embed"], tokens, cfg)
+        window = cfg.sliding_window or window_override
+        body = self._dec_body(enc_out, positions, window, "full", False)
+        remat = "full" if mode == "train" else "none"
+        x, new_cache, aux = scan_layers(body, x, params["decoder"],
+                                        stacked_cache=cache, remat=remat)
+        x = norm_apply(params["ln_f"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)
+        if cache is not None:
+            return logits, new_cache, aux
+        return logits, aux
+
+    def cache_spec(self, batch: int, cache_len: int, window: int = 0) -> dict:
+        cfg = self.cfg
+        S = min(cache_len, window) if window > 0 else cache_len
+        t = cfg.cross_attn.num_media_tokens
+        unit = {
+            "self": kv_cache_param(cfg, batch, S),
+            "cross": {
+                "k": Param((batch, t, cfg.num_kv_heads, cfg.head_dim),
+                           ("batch", "media", "kv_heads", None),
+                           init="zeros", dtype="bfloat16"),
+                "v": Param((batch, t, cfg.num_kv_heads, cfg.head_dim),
+                           ("batch", "media", "kv_heads", None),
+                           init="zeros", dtype="bfloat16"),
+            },
+        }
+        return stack_cache(unit, cfg.num_layers)
+
+    def decode_step(self, params, tokens, positions, cache, *, window: int = 0,
+                    dp_size: int = 1):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg)
+        w = cfg.sliding_window or window
+        body = self._dec_body(None, positions, w, "decode", True)
+        x, new_cache, _ = scan_layers(body, x, params["decoder"],
+                                      stacked_cache=cache, remat="none")
+        x = norm_apply(params["ln_f"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)
+        return logits, new_cache

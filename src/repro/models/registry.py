@@ -1,0 +1,62 @@
+"""Model registry: family -> class dispatch and analytic parameter counts."""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax
+
+from repro.core.config import ModelConfig
+from repro.nn.param import Param, is_param
+
+
+def get_model(cfg: ModelConfig):
+    from repro.models.transformer import TransformerLM
+    from repro.models.rwkv6 import RWKV6LM
+    from repro.models.zamba2 import Zamba2LM
+    from repro.models.vision_lm import VisionLM
+    from repro.models.encdec import EncDecLM
+
+    if cfg.family == "ssm":
+        return RWKV6LM(cfg)
+    if cfg.family == "hybrid":
+        return Zamba2LM(cfg)
+    if cfg.family == "vlm":
+        return VisionLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    # dense + moe
+    return TransformerLM(cfg)
+
+
+def _spec_counts(spec):
+    """(total, expert, embed) parameter counts from a Param spec tree."""
+    total = expert = embed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+        spec, is_leaf=is_param
+    )[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if any(str(k).startswith("we_") for k in keys):
+            expert += n
+        if "embed" in [str(k) for k in keys] or any(
+            str(k) in ("tok", "head") for k in keys
+        ):
+            embed += n
+    return total, expert, embed
+
+
+def analytic_param_count(
+    cfg: ModelConfig, active_only: bool = False, non_embedding: bool = False
+) -> int:
+    model = get_model(cfg)
+    total, expert, embed = _spec_counts(model.param_spec())
+    n = total
+    if active_only and cfg.moe is not None:
+        k, E = cfg.moe.num_experts_per_token, cfg.moe.num_experts
+        n = total - expert + expert * k / E
+    if non_embedding:
+        n -= embed
+    return int(n)

@@ -1,0 +1,105 @@
+"""RWKV6 (Finch) language model — attention-free, O(1)-state decode.
+
+Per DESIGN.md §Arch-applicability the paper's conv/attention ladder is
+inapplicable here; the layout + fused-epilogue techniques apply to the
+projections, and the WKV6 time-mixing uses chunked temporal blocking.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.nn.embedding import embedding_spec, embed_tokens, lm_logits
+from repro.nn.param import stack_spec
+from repro.nn.rwkv import (
+    rwkv_time_spec,
+    rwkv_channel_spec,
+    rwkv_time_apply,
+    rwkv_channel_apply,
+    rwkv_dims,
+)
+from repro.models.common import BaseModel, norm_spec, norm_apply, scan_layers
+from repro.nn.param import Param
+
+
+class RWKV6LM(BaseModel):
+    def param_spec(self) -> dict:
+        cfg = self.cfg
+        unit = {
+            "ln1": norm_spec(cfg),
+            "time": rwkv_time_spec(cfg),
+            "ln2": norm_spec(cfg),
+            "chan": rwkv_channel_spec(cfg),
+        }
+        return {
+            "embed": embedding_spec(cfg),
+            "ln0": norm_spec(cfg),
+            "layers": stack_spec(unit, cfg.num_layers),
+            "ln_f": norm_spec(cfg),
+        }
+
+    def _body(self, mode):
+        cfg = self.cfg
+
+        def body(xc, p_i, c_i):
+            has_cache = isinstance(c_i, dict)
+            tc = c_i["time"] if has_cache else None
+            cc = c_i["chan"] if has_cache else None
+            h = norm_apply(p_i["ln1"], xc, cfg)
+            t_out, new_tc = rwkv_time_apply(p_i["time"], h, cfg, cache=tc,
+                                            mode=mode)
+            xc = xc + t_out
+            h = norm_apply(p_i["ln2"], xc, cfg)
+            c_out, new_cc = rwkv_channel_apply(p_i["chan"], h, cfg, cache=cc)
+            xc = xc + c_out
+            ncache = {"time": new_tc, "chan": new_cc} if has_cache else c_i
+            return xc, ncache, {}
+
+        return body
+
+    def forward(self, params, batch, mode: str = "train", *, dp_size: int = 1,
+                window_override: int = 0, cache=None, use_pallas: bool = False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed_tokens(params["embed"], tokens, cfg)
+        x = norm_apply(params["ln0"], x, cfg)
+        remat = "full" if mode == "train" else "none"
+        x, new_cache, aux = scan_layers(self._body("full"), x, params["layers"],
+                                        stacked_cache=cache, remat=remat)
+        x = norm_apply(params["ln_f"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)
+        if cache is not None:
+            return logits, new_cache, aux
+        return logits, aux
+
+    def cache_spec(self, batch: int, cache_len: int, window: int = 0) -> dict:
+        cfg = self.cfg
+        d, h = rwkv_dims(cfg)
+        e = cfg.rwkv.head_dim
+        L = cfg.num_layers
+        unit = {
+            "time": {
+                "last": Param((L, batch, d), ("layers", "batch", None),
+                              init="zeros", dtype="float32"),
+                "state": Param((L, batch, h, e, e),
+                               ("layers", "batch", "heads", None, None),
+                               init="zeros", dtype="float32"),
+            },
+            "chan": {
+                "last": Param((L, batch, d), ("layers", "batch", None),
+                              init="zeros", dtype="float32"),
+            },
+        }
+        return unit
+
+    def decode_step(self, params, tokens, positions, cache, *, window: int = 0,
+                    dp_size: int = 1):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg)
+        x = norm_apply(params["ln0"], x, cfg)
+        x, new_cache, _ = scan_layers(self._body("decode"), x, params["layers"],
+                                      stacked_cache=cache, remat="none")
+        x = norm_apply(params["ln_f"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)
+        return logits, new_cache

@@ -1,0 +1,157 @@
+"""Decoder-only transformer LM: dense GQA and MoE variants.
+
+Covers starcoder2 / internlm2 / qwen1.5 (dense), gemma2 (alternating
+local/global attention, softcaps, post-block norms), grok-1 and qwen3-moe
+(MoE FFNs).  Layers run under one ``lax.scan`` over stacked parameters; for
+gemma2-style alternation the scan unit is a (local, global) *pair*.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.nn.embedding import embedding_spec, embed_tokens, lm_logits
+from repro.nn.param import Param, stack_spec
+from repro.models.common import (
+    BaseModel,
+    block_spec,
+    block_apply,
+    kv_cache_param,
+    norm_spec,
+    norm_apply,
+    scan_layers,
+)
+
+
+class TransformerLM(BaseModel):
+    """Dense or MoE decoder-only LM."""
+
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        self.use_moe = cfg.moe is not None
+        self.pair = cfg.local_global_interval == 2
+        assert cfg.local_global_interval in (0, 2), "only k=2 alternation"
+        if self.pair:
+            assert cfg.num_layers % 2 == 0
+        self.n_scan = cfg.num_layers // (2 if self.pair else 1)
+
+    # -- params ---------------------------------------------------------------
+    def param_spec(self) -> dict:
+        cfg = self.cfg
+        if self.pair:
+            unit = {
+                "local": block_spec(cfg, use_moe=self.use_moe),
+                "global": block_spec(cfg, use_moe=self.use_moe),
+            }
+        else:
+            unit = block_spec(cfg, use_moe=self.use_moe)
+        return {
+            "embed": embedding_spec(cfg),
+            "layers": stack_spec(unit, self.n_scan),
+            "ln_f": norm_spec(cfg),
+        }
+
+    # -- windows --------------------------------------------------------------
+    def _windows(self, window_override: int) -> Tuple[int, int]:
+        """(local_window, global_window) per scan unit."""
+        cfg = self.cfg
+        if self.pair:
+            return cfg.sliding_window, window_override
+        return cfg.sliding_window or window_override, 0
+
+    # -- forward (train / prefill) ---------------------------------------------
+    def forward(self, params, batch, mode: str = "train", *, dp_size: int = 1,
+                window_override: int = 0, cache=None, use_pallas: bool = False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        x = embed_tokens(params["embed"], tokens, cfg,
+                         scale_by_dim=cfg.rms_plus_one)
+        lw, gw = self._windows(window_override)
+        remat = "full" if mode == "train" else "none"
+
+        def body(xc, p_i, c_i):
+            if self.pair:
+                c_loc = c_i["local"] if isinstance(c_i, dict) else None
+                c_glb = c_i["global"] if isinstance(c_i, dict) else None
+                xc, nc_l, aux1 = block_apply(
+                    p_i["local"], xc, cfg, window=lw, positions=positions,
+                    mode="full", cache=c_loc, use_moe=self.use_moe,
+                    dp_size=dp_size, moe_mode=mode, use_pallas=use_pallas)
+                xc, nc_g, aux2 = block_apply(
+                    p_i["global"], xc, cfg, window=gw, positions=positions,
+                    mode="full", cache=c_glb, use_moe=self.use_moe,
+                    dp_size=dp_size, moe_mode=mode, use_pallas=use_pallas)
+                aux = {k: aux1.get(k, 0.0) + aux2.get(k, 0.0)
+                       for k in set(aux1) | set(aux2)
+                       if k.endswith("loss")}
+                ncache = ({"local": nc_l, "global": nc_g}
+                          if isinstance(c_i, dict) else c_i)
+            else:
+                cache_i = c_i if isinstance(c_i, dict) else None
+                xc, ncache, aux = block_apply(
+                    p_i, xc, cfg, window=lw, positions=positions, mode="full",
+                    cache=cache_i, use_moe=self.use_moe, dp_size=dp_size,
+                    moe_mode=mode, use_pallas=use_pallas)
+                if not isinstance(c_i, dict):
+                    ncache = c_i
+            return xc, ncache, aux
+
+        x, new_cache, aux = scan_layers(
+            body, x, params["layers"], stacked_cache=cache, remat=remat)
+        x = norm_apply(params["ln_f"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)
+        if cache is not None:
+            return logits, new_cache, aux
+        return logits, aux
+
+    # -- caches ----------------------------------------------------------------
+    def cache_spec(self, batch: int, cache_len: int, window: int = 0) -> dict:
+        cfg = self.cfg
+        lw, gw = self._windows(window)
+
+        def clen(w):
+            return min(cache_len, w) if w > 0 else cache_len
+
+        if self.pair:
+            return {
+                "local": kv_cache_param(cfg, batch, clen(lw), stacked=self.n_scan),
+                "global": kv_cache_param(cfg, batch, clen(gw), stacked=self.n_scan),
+            }
+        return kv_cache_param(cfg, batch, clen(lw), stacked=self.n_scan)
+
+    # -- decode ------------------------------------------------------------------
+    def decode_step(self, params, tokens, positions, cache, *, window: int = 0,
+                    dp_size: int = 1):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg,
+                         scale_by_dim=cfg.rms_plus_one)
+        lw, gw = self._windows(window)
+
+        def body(xc, p_i, c_i):
+            if self.pair:
+                xc, nc_l, _ = block_apply(
+                    p_i["local"], xc, cfg, window=lw, positions=positions,
+                    mode="decode", cache=c_i["local"], use_moe=self.use_moe,
+                    dp_size=dp_size)
+                xc, nc_g, _ = block_apply(
+                    p_i["global"], xc, cfg, window=gw, positions=positions,
+                    mode="decode", cache=c_i["global"], use_moe=self.use_moe,
+                    dp_size=dp_size)
+                return xc, {"local": nc_l, "global": nc_g}, {}
+            xc, nc, _ = block_apply(
+                p_i, xc, cfg, window=lw, positions=positions, mode="decode",
+                cache=c_i, use_moe=self.use_moe, dp_size=dp_size)
+            return xc, nc, {}
+
+        x, new_cache, _ = scan_layers(body, x, params["layers"],
+                                      stacked_cache=cache, remat="none")
+        x = norm_apply(params["ln_f"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)
+        return logits, new_cache

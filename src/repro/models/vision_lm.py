@@ -1,0 +1,158 @@
+"""Llama-3.2-Vision style VLM decoder: self-attn layers with gated
+cross-attention layers every ``cross_attn.interval`` layers.
+
+The vision frontend (ViT + tiling) is a STUB per the assignment carve-out:
+``batch["media_embeds"]`` carries precomputed patch embeddings
+[b, n_media, media_dim]; only the projector and the language decoder are
+implemented.  Cross K/V are computed once (prefill) and cached for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.nn.attention import cross_kv, cross_attention_cached
+from repro.nn.embedding import embedding_spec, embed_tokens, lm_logits
+from repro.nn.linear import linear_spec, dense
+from repro.nn.param import Param, stack_spec
+from repro.models.common import (
+    BaseModel,
+    block_spec,
+    block_apply,
+    kv_cache_param,
+    norm_spec,
+    norm_apply,
+    scan_layers,
+)
+
+
+class VisionLM(BaseModel):
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        interval = cfg.cross_attn.interval
+        assert interval > 1 and cfg.num_layers % interval == 0
+        self.n_groups = cfg.num_layers // interval  # groups of (interval-1
+        self.n_self = interval - 1  # self layers per group) + 1 cross layer
+
+    def param_spec(self) -> dict:
+        cfg = self.cfg
+        unit = {
+            "self": stack_spec(block_spec(cfg), self.n_self, axis_name=None),
+            "cross": block_spec(cfg, cross=True, d_in=cfg.d_model),
+        }
+        return {
+            "embed": embedding_spec(cfg),
+            "projector": linear_spec(cfg.cross_attn.media_dim, cfg.d_model,
+                                     "media", "embed", bias=True),
+            "layers": stack_spec(unit, self.n_groups),
+            "ln_f": norm_spec(cfg),
+        }
+
+    # -- forward ----------------------------------------------------------------
+    def forward(self, params, batch, mode: str = "train", *, dp_size: int = 1,
+                window_override: int = 0, cache=None, use_pallas: bool = False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.arange(s)[None, :]
+        media = dense(params["projector"], batch["media_embeds"])  # [b,t,d]
+        x = embed_tokens(params["embed"], tokens, cfg)
+        window = cfg.sliding_window or window_override
+        remat = "full" if mode == "train" else "none"
+
+        def body(xc, p_i, c_i):
+            has_cache = isinstance(c_i, dict)
+
+            def self_body(xs, p_s, c_s):
+                cc = c_s if isinstance(c_s, dict) else None
+                xs, nc, _ = block_apply(
+                    p_s, xs, cfg, window=window, positions=positions,
+                    mode="full", cache=cc, use_pallas=use_pallas)
+                return xs, (nc if cc is not None else c_s), {}
+
+            c_self = c_i["self"] if has_cache else None
+            xc, nc_self, _ = scan_layers(self_body, xc, p_i["self"],
+                                         stacked_cache=c_self, remat="none")
+            xc, _, _ = block_apply(
+                p_i["cross"], xc, cfg, positions=positions, mode="full",
+                context=media, use_pallas=use_pallas)
+            ncache = c_i
+            if has_cache:
+                ck, cv = cross_kv(p_i["cross"]["attn"], media, cfg)
+                ncache = {"self": nc_self,
+                          "cross": {"k": ck.astype(jnp.bfloat16),
+                                    "v": cv.astype(jnp.bfloat16)}}
+            return xc, ncache, {}
+
+        x, new_cache, aux = scan_layers(body, x, params["layers"],
+                                        stacked_cache=cache, remat=remat)
+        x = norm_apply(params["ln_f"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)
+        if cache is not None:
+            return logits, new_cache, aux
+        return logits, aux
+
+    def cache_spec(self, batch: int, cache_len: int, window: int = 0) -> dict:
+        cfg = self.cfg
+        S = min(cache_len, window) if window > 0 else cache_len
+        t = cfg.cross_attn.num_media_tokens
+        unit = {
+            "self": kv_cache_param(cfg, batch, S, stacked=self.n_self),
+            "cross": {
+                "k": Param((batch, t, cfg.num_kv_heads, cfg.head_dim),
+                           ("batch", "media", "kv_heads", None),
+                           init="zeros", dtype="bfloat16"),
+                "v": Param((batch, t, cfg.num_kv_heads, cfg.head_dim),
+                           ("batch", "media", "kv_heads", None),
+                           init="zeros", dtype="bfloat16"),
+            },
+        }
+        return stack_cache(unit, self.n_groups)
+
+    def decode_step(self, params, tokens, positions, cache, *, window: int = 0,
+                    dp_size: int = 1):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg)
+        w = cfg.sliding_window or window
+
+        def body(xc, p_i, c_i):
+            def self_body(xs, p_s, c_s):
+                xs, nc, _ = block_apply(
+                    p_s, xs, cfg, window=w, positions=positions,
+                    mode="decode", cache=c_s)
+                return xs, nc, {}
+
+            xc, nc_self, _ = scan_layers(self_body, xc, p_i["self"],
+                                         stacked_cache=c_i["self"],
+                                         remat="none")
+            # gated cross-attn + mlp against the cached media K/V
+            h = norm_apply(p_i["cross"]["ln_attn"], xc, cfg)
+            a = cross_attention_cached(p_i["cross"]["attn"], h,
+                                       c_i["cross"]["k"], c_i["cross"]["v"],
+                                       cfg)
+            a = a * jnp.tanh(p_i["cross"]["gate_attn"]).astype(a.dtype)
+            xc = xc + a
+            h = norm_apply(p_i["cross"]["ln_mlp"], xc, cfg)
+            from repro.nn.mlp import mlp_apply
+
+            m = mlp_apply(p_i["cross"]["mlp"], h, cfg)
+            m = m * jnp.tanh(p_i["cross"]["gate_mlp"]).astype(m.dtype)
+            xc = xc + m
+            return xc, {"self": nc_self, "cross": c_i["cross"]}, {}
+
+        x, new_cache, _ = scan_layers(body, x, params["layers"],
+                                      stacked_cache=cache, remat="none")
+        x = norm_apply(params["ln_f"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)
+        return logits, new_cache
+
+
+def stack_cache(unit, n):
+    """Prepend the group dimension to a cache-spec pytree."""
+    from repro.nn.param import Param as _P
+
+    def f(p):
+        return _P((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale, p.dtype)
+
+    return jax.tree_util.tree_map(f, unit, is_leaf=lambda x: isinstance(x, _P))

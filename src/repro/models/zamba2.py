@@ -1,0 +1,198 @@
+"""Zamba2 hybrid: Mamba2 backbone + one *shared* attention block.
+
+38 Mamba2 blocks; after every 6th block the shared transformer block runs on
+``concat(hidden, original_embedding)`` at width 2·d_model and its output is
+projected back to d_model and added residually (arXiv:2411.15242; LoRA
+per-invocation adapters simplified to a per-invocation layerscale —
+DESIGN.md §7).  Weight sharing is the paper's "load once, reuse many times"
+argument at whole-block scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.nn.embedding import embedding_spec, embed_tokens, lm_logits
+from repro.nn.linear import linear_spec, dense
+from repro.nn.param import Param, stack_spec
+from repro.nn.ssm import ssm_spec, ssm_apply, ssm_dims
+from repro.models.common import (
+    BaseModel,
+    block_spec,
+    block_apply,
+    kv_cache_param,
+    norm_spec,
+    norm_apply,
+    scan_layers,
+)
+
+
+class Zamba2LM(BaseModel):
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        every = cfg.shared_attn_every
+        assert every > 0
+        self.n_groups = cfg.num_layers // every  # shared-block invocations
+        self.group = every
+        self.n_tail = cfg.num_layers - self.n_groups * every
+        # the shared block operates at width 2*d_model
+        self.wide_cfg = dataclasses.replace(
+            cfg, d_model=2 * cfg.d_model, moe=None, ssm=None, shared_attn_every=0
+        )
+
+    def _mamba_unit(self):
+        return {"ln": norm_spec(self.cfg), "ssm": ssm_spec(self.cfg)}
+
+    def param_spec(self) -> dict:
+        cfg = self.cfg
+        spec = {
+            "embed": embedding_spec(cfg),
+            "mamba": stack_spec(self._mamba_unit(), self.n_groups * self.group),
+            "shared": block_spec(self.wide_cfg),
+            "shared_out": linear_spec(2 * cfg.d_model, cfg.d_model,
+                                      "ff", "embed"),
+            "layerscale": Param((self.n_groups, cfg.d_model),
+                                (None, "embed"), init="ones", dtype="float32"),
+            "ln_f": norm_spec(cfg),
+        }
+        if self.n_tail:
+            spec["mamba_tail"] = stack_spec(self._mamba_unit(), self.n_tail)
+        return spec
+
+    # -- helpers ---------------------------------------------------------------
+    def _mamba_body(self, mode):
+        cfg = self.cfg
+
+        def body(xc, p_i, c_i):
+            has_cache = isinstance(c_i, dict)
+            h = norm_apply(p_i["ln"], xc, cfg)
+            y, ncache = ssm_apply(p_i["ssm"], h, cfg, mode=mode,
+                                  cache=c_i if has_cache else None)
+            return xc + y, (ncache if has_cache else c_i), {}
+
+        return body
+
+    def _shared_apply(self, params, x, embeds, gi, *, window, positions, mode,
+                      cache):
+        """One invocation of the shared wide block."""
+        cfg = self.cfg
+        wide = jnp.concatenate([x, embeds], axis=-1)
+        y, ncache, _ = block_apply(
+            params["shared"], wide, self.wide_cfg, window=window,
+            positions=positions, mode=mode, cache=cache)
+        out = dense(params["shared_out"], y)
+        scale = params["layerscale"][gi].astype(out.dtype)
+        return x + out * scale, ncache
+
+    def _mamba_cache_unit(self, batch: int, stacked: int):
+        cfg = self.cfg
+        d_inner, h = ssm_dims(cfg)
+        n, K = cfg.ssm.d_state, cfg.ssm.d_conv
+        c = d_inner + 2 * n
+        return {
+            "conv": Param((stacked, batch, K - 1, c),
+                          ("layers", "batch", None, "ssm_inner"),
+                          init="zeros", dtype="float32"),
+            "state": Param((stacked, batch, h, cfg.ssm.head_dim, n),
+                           ("layers", "batch", "heads", None, None),
+                           init="zeros", dtype="float32"),
+        }
+
+    def cache_spec(self, batch: int, cache_len: int, window: int = 0) -> dict:
+        cfg = self.cfg
+        S = min(cache_len, window) if window > 0 else cache_len
+        spec = {
+            "mamba": self._mamba_cache_unit(batch, self.n_groups * self.group),
+            "shared_kv": kv_cache_param(self.wide_cfg, batch, S,
+                                        stacked=self.n_groups),
+        }
+        if self.n_tail:
+            spec["mamba_tail"] = self._mamba_cache_unit(batch, self.n_tail)
+        return spec
+
+    # -- forward ----------------------------------------------------------------
+    def _run(self, params, x, embeds, *, mode, positions, window, cache,
+             remat=False):
+        g, gg = self.group, self.n_groups
+        mamba_params = jax.tree_util.tree_map(
+            lambda a: a.reshape((gg, g) + a.shape[1:]), params["mamba"])
+        mamba_cache = None
+        if cache is not None:
+            mamba_cache = jax.tree_util.tree_map(
+                lambda a: a.reshape((gg, g) + a.shape[1:]), cache["mamba"])
+        body = self._mamba_body(mode)
+
+        new_mamba_caches = []
+        new_shared_caches = []
+        for gi in range(gg):
+            p_g = jax.tree_util.tree_map(lambda a: a[gi], mamba_params)
+            c_g = (jax.tree_util.tree_map(lambda a: a[gi], mamba_cache)
+                   if mamba_cache is not None else None)
+            x, nc, _ = scan_layers(body, x, p_g, stacked_cache=c_g,
+                                   remat="full" if remat else "none")
+            if cache is not None:
+                new_mamba_caches.append(nc)
+            sc = (jax.tree_util.tree_map(lambda a: a[gi], cache["shared_kv"])
+                  if cache is not None else None)
+            shared_fn = self._shared_apply
+            if remat:
+                shared_fn = jax.checkpoint(
+                    lambda p, xx, ee: self._shared_apply(
+                        p, xx, ee, gi, window=window, positions=positions,
+                        mode=mode, cache=sc),
+                    prevent_cse=False)
+                x, nsc = shared_fn(params, x, embeds)
+            else:
+                x, nsc = shared_fn(params, x, embeds, gi, window=window,
+                                   positions=positions, mode=mode, cache=sc)
+            if cache is not None:
+                new_shared_caches.append(nsc)
+        if self.n_tail:
+            c_t = cache["mamba_tail"] if cache is not None else None
+            x, nct, _ = scan_layers(body, x, params["mamba_tail"],
+                                    stacked_cache=c_t,
+                                    remat="full" if remat else "none")
+        new_cache = None
+        if cache is not None:
+            stack = lambda trees: jax.tree_util.tree_map(
+                lambda *a: jnp.stack(a), *trees)
+            merged = jax.tree_util.tree_map(
+                lambda a: a.reshape((gg * g,) + a.shape[2:]),
+                stack(new_mamba_caches))
+            new_cache = {"mamba": merged, "shared_kv": stack(new_shared_caches)}
+            if self.n_tail:
+                new_cache["mamba_tail"] = nct
+        return x, new_cache
+
+    def forward(self, params, batch, mode: str = "train", *, dp_size: int = 1,
+                window_override: int = 0, cache=None, use_pallas: bool = False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.arange(s)[None, :]
+        embeds = embed_tokens(params["embed"], tokens, cfg)
+        x = embeds
+        window = cfg.sliding_window or window_override
+        x, new_cache = self._run(params, x, embeds, mode="full",
+                                 positions=positions, window=window,
+                                 cache=cache, remat=(mode == "train"))
+        x = norm_apply(params["ln_f"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)
+        from repro.models.common import _zero_aux
+        if cache is not None:
+            return logits, new_cache, _zero_aux()
+        return logits, _zero_aux()
+
+    def decode_step(self, params, tokens, positions, cache, *, window: int = 0,
+                    dp_size: int = 1):
+        cfg = self.cfg
+        embeds = embed_tokens(params["embed"], tokens, cfg)
+        w = cfg.sliding_window or window
+        x, new_cache = self._run(params, embeds, embeds, mode="decode",
+                                 positions=positions, window=w, cache=cache)
+        x = norm_apply(params["ln_f"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)
+        return logits, new_cache

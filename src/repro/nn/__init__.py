@@ -1,0 +1,10 @@
+"""Pure-JAX neural-network substrate.
+
+Modules are pairs of functions: ``<module>_spec(cfg) -> pytree[Param]``
+describing parameters (shape + logical sharding axes + initializer), and
+``<module>_apply(params, ...)`` computing the forward pass.  No framework
+dependency; everything composes with jit/pjit/shard_map/scan.
+"""
+from repro.nn.param import Param, init_tree, axes_tree, stack_spec
+
+__all__ = ["Param", "init_tree", "axes_tree", "stack_spec"]

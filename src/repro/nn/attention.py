@@ -1,0 +1,643 @@
+"""Attention: GQA, RoPE, sliding-window, softcap, cross-attention, KV cache.
+
+Two execution paths:
+
+* ``chunked_attention`` — training/prefill.  A *pair-list* flash-style
+  attention in pure jnp: the (q-chunk, kv-chunk) pairs that are visible
+  under the causal/sliding-window mask are enumerated statically at trace
+  time and processed by one ``lax.scan`` with online softmax.  Memory is
+  O(chunk²) instead of O(seq²) and HLO FLOPs match the true masked FLOPs
+  (no full s×s score tensor is ever built).  This is also the oracle for
+  the flash Pallas kernel in ``repro.kernels.attention``.
+
+* ``decode_attention`` — single-token decode against a (possibly
+  ring-buffered sliding-window) KV cache with per-request positions.
+
+GQA sharding note: q heads shard over the model axis when divisible; k/v
+heads are stored un-expanded in the cache and repeated to full heads at
+compute time (repetition is bytes-free in FLOPs and keeps the head axis
+sharding consistent — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.nn.linear import linear_spec, dense
+from repro.nn.norm import rmsnorm_spec, rmsnorm_apply
+from repro.nn.param import Param
+from repro.nn.rope import apply_rope
+from repro.sharding.ctx import shard_act
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec
+# ---------------------------------------------------------------------------
+
+
+def attention_spec(cfg: ModelConfig, cross: bool = False, kv_dim: Optional[int] = None) -> dict:
+    """QKV + output projections.  ``cross=True`` reads K/V from a context
+    stream of width ``kv_dim`` (defaults to d_model)."""
+    d = cfg.d_model
+    kv_in = kv_dim or d
+    spec = {
+        "wq": linear_spec(d, cfg.q_dim, "embed", "heads", bias=cfg.use_qkv_bias),
+        "wk": linear_spec(kv_in, cfg.kv_dim, "embed", "kv_heads", bias=cfg.use_qkv_bias),
+        "wv": linear_spec(kv_in, cfg.kv_dim, "embed", "kv_heads", bias=cfg.use_qkv_bias),
+        "wo": linear_spec(cfg.q_dim, d, "heads", "embed"),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = rmsnorm_spec(cfg.head_dim)
+        spec["k_norm"] = rmsnorm_spec(cfg.head_dim)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Masked-pair enumeration (static, trace-time)
+# ---------------------------------------------------------------------------
+
+
+def _visible_pairs(
+    n_q: int, n_kv: int, cq: int, ck: int, causal: bool, window: int, q_start: int
+):
+    """Static list of (q_chunk, kv_chunk) pairs with any unmasked element.
+
+    q positions of chunk i: [q_start + i*cq, q_start + (i+1)*cq).
+    kv positions of chunk j: [j*ck, (j+1)*ck).
+    """
+    pairs = []
+    for i in range(n_q):
+        q_lo = q_start + i * cq
+        q_hi = q_start + (i + 1) * cq - 1
+        for j in range(n_kv):
+            k_lo = j * ck
+            k_hi = (j + 1) * ck - 1
+            if causal and k_lo > q_hi:
+                continue  # entirely in the future
+            if window > 0 and k_hi < q_lo - window + 1:
+                continue  # entirely outside the sliding window
+            pairs.append((i, j))
+    return pairs
+
+
+def softcap(x, cap: float):
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention (train / prefill) with custom VJP
+#
+# Differentiating naively through the pair-scan would make JAX save every
+# per-pair score/prob tensor — the full O(s²) attention matrix (measured:
+# ~130 GB/device for gemma2 train_4k, EXPERIMENTS.md §Perf).  The custom
+# VJP saves only (q, k, v, out, m, l) and recomputes each pair's scores in
+# a second pair-scan — the flash-attention backward, and the exact
+# semantics the Pallas kernel implements on TPU.
+# ---------------------------------------------------------------------------
+
+
+def _pair_mask(i, j, cq, ck, causal, window, q_start, skv):
+    """Additive mask [cq, ck] (0 where visible, NEG_INF where masked).
+
+    Kept as a small fp32 tile — a boolean mask broadcast to the full
+    [b,h,cq,ck] score shape gets stacked across the whole pair-scan by
+    XLA's hoisting (measured ~1.7 GB/device at train_4k; EXPERIMENTS.md
+    §Perf)."""
+    q_pos = q_start + i * cq + jnp.arange(cq)  # [cq]
+    k_pos = j * ck + jnp.arange(ck)  # [ck]
+    mask = jnp.ones((cq, ck), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    mask &= (k_pos < skv)[None, :]  # kv padding
+    return jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _scores(qb, kb, scale, cap, addmask):
+    s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                   preferred_element_type=jnp.float32)
+    s_pre = s * scale
+    s = softcap(s_pre, cap)
+    s = s + addmask[None, None]
+    return s, s_pre
+
+
+def _flash_fwd_scan(q, k, v, pair_arr, meta):
+    causal, window, cap, scale, q_start, cq, ck, skv = meta
+    b, sq_p, h, hd = q.shape
+    m0 = jnp.full((b, sq_p, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq_p, h), jnp.float32)
+    a0 = jnp.zeros((b, sq_p, h, hd), jnp.float32)
+
+    def step(carry, pair):
+        m, l, acc = carry
+        i, j = pair[0], pair[1]
+        qb = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(k, j * ck, ck, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, j * ck, ck, axis=1)
+        addmask = _pair_mask(i, j, cq, ck, causal, window, q_start, skv)
+        s, _ = _scores(qb, kb, scale, cap, addmask)
+        mb = jax.lax.dynamic_slice_in_dim(m, i * cq, cq, axis=1)  # [b,cq,h]
+        lb = jax.lax.dynamic_slice_in_dim(l, i * cq, cq, axis=1)
+        ab = jax.lax.dynamic_slice_in_dim(acc, i * cq, cq, axis=1)
+        s_max = jnp.max(s, axis=-1).transpose(0, 2, 1)  # [b,cq,h]
+        m_new = jnp.maximum(mb, s_max)
+        # rows that have seen no visible key yet keep p == 0 (guard against
+        # exp(NEG_INF - NEG_INF) == 1 on fully-masked rows)
+        row_ok = (m_new > NEG_INF / 2).transpose(0, 2, 1)[..., None]
+        p = jnp.exp(s - m_new.transpose(0, 2, 1)[..., None])  # [b,h,cq,ck]
+        p = p * row_ok
+        alpha = jnp.exp(mb - m_new)
+        l_new = lb * alpha + jnp.sum(p, axis=-1).transpose(0, 2, 1)
+        pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        a_new = ab * alpha[..., None] + pv
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * cq, axis=1)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, i * cq, axis=1)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, i * cq, axis=1)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), pair_arr)
+    out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+    return out, m, l
+
+
+def _flash_bwd_scan(q, k, v, out, m, l, do, pair_arr, meta):
+    causal, window, cap, scale, q_start, cq, ck, skv = meta
+    b, sq_p, h, hd = q.shape
+    l_safe = jnp.maximum(l, 1e-30)
+    # D_i = do_i · o_i  (rowsum of do*out)
+    D = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    skv_p = k.shape[1]
+    dq0 = jnp.zeros((b, sq_p, h, hd), jnp.float32)
+    dk0 = jnp.zeros((b, skv_p, h, hd), jnp.float32)
+    dv0 = jnp.zeros((b, skv_p, h, hd), jnp.float32)
+
+    def step(carry, pair):
+        dq, dk, dv = carry
+        i, j = pair[0], pair[1]
+        qb = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(k, j * ck, ck, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, j * ck, ck, axis=1)
+        dob = jax.lax.dynamic_slice_in_dim(do, i * cq, cq, axis=1)
+        mb = jax.lax.dynamic_slice_in_dim(m, i * cq, cq, axis=1)
+        lb = jax.lax.dynamic_slice_in_dim(l_safe, i * cq, cq, axis=1)
+        Db = jax.lax.dynamic_slice_in_dim(D, i * cq, cq, axis=1)  # [b,cq,h]
+        addmask = _pair_mask(i, j, cq, ck, causal, window, q_start, skv)
+        s, s_pre = _scores(qb, kb, scale, cap, addmask)
+        row_ok = (mb > NEG_INF / 2).transpose(0, 2, 1)[..., None]
+        p = jnp.exp(s - mb.transpose(0, 2, 1)[..., None]) * row_ok
+        p = p / lb.transpose(0, 2, 1)[..., None]  # normalized probs
+        dp = jnp.einsum("bqhd,bkhd->bhqk", dob.astype(jnp.float32),
+                        vb.astype(jnp.float32))
+        ds = p * (dp - Db.transpose(0, 2, 1)[..., None])
+        if cap and cap > 0.0:
+            t = jnp.tanh(s_pre / cap)
+            ds = ds * (1.0 - t * t)
+        ds = ds * scale
+        dq_b = jnp.einsum("bhqk,bkhd->bqhd", ds, kb.astype(jnp.float32))
+        dk_b = jnp.einsum("bhqk,bqhd->bkhd", ds, qb.astype(jnp.float32))
+        dv_b = jnp.einsum("bhqk,bqhd->bkhd", p, dob.astype(jnp.float32))
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, jax.lax.dynamic_slice_in_dim(dq, i * cq, cq, axis=1) + dq_b,
+            i * cq, axis=1)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, j * ck, ck, axis=1) + dk_b,
+            j * ck, axis=1)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, j * ck, ck, axis=1) + dv_b,
+            j * ck, axis=1)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0), pair_arr)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_attention(q, k, v, meta, pairs):
+    pair_arr = jnp.asarray(pairs, dtype=jnp.int32)
+    out, _, _ = _flash_fwd_scan(q, k, v, pair_arr, meta)
+    return out
+
+
+def _flash_attention_fwd(q, k, v, meta, pairs):
+    pair_arr = jnp.asarray(pairs, dtype=jnp.int32)
+    out, m, l = _flash_fwd_scan(q, k, v, pair_arr, meta)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_attention_bwd(meta, pairs, res, do):
+    q, k, v, out, m, l = res
+    pair_arr = jnp.asarray(pairs, dtype=jnp.int32)
+    return _flash_bwd_scan(q, k, v, out, m, l, do, pair_arr, meta)
+
+
+_flash_attention.defvjp(_flash_attention_fwd, _flash_attention_bwd)
+
+
+def chunked_attention(
+    q,  # [b, sq, h, hd]
+    k,  # [b, skv, kvh, hd]
+    v,  # [b, skv, kvh, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    scale: Optional[float] = None,
+    q_start: int = 0,
+    chunk_q: int = 512,
+    chunk_kv: int = 512,
+):
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    group = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    cq = min(chunk_q, sq)
+    ck = min(chunk_kv, skv)
+    pad_q = (-sq) % cq
+    pad_k = (-skv) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq_p, skv_p = sq + pad_q, skv + pad_k
+    n_q, n_kv = sq_p // cq, skv_p // ck
+
+    pairs = tuple(_visible_pairs(n_q, n_kv, cq, ck, causal, window, q_start))
+
+    # expand kv heads to full heads (bytes-only; keeps head-axis sharding)
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+
+    q = shard_act(q, ("batch", "seq", "heads", None))
+    k = shard_act(k, ("batch", "seq", "heads", None))
+    v = shard_act(v, ("batch", "seq", "heads", None))
+    meta = (causal, window, attn_softcap, scale, q_start, cq, ck, skv)
+    out = _flash_attention(q, k, v, meta, pairs)
+    return shard_act(out[:, :sq], ("batch", "seq", "heads", None))
+
+
+# ---------------------------------------------------------------------------
+# Reference (materialized) attention — oracle for tests, small shapes only
+# ---------------------------------------------------------------------------
+
+
+def reference_attention(
+    q, k, v, *, causal=True, window=0, attn_softcap=0.0, scale=None, q_start=0
+):
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    group = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = softcap(s * scale, attn_softcap)
+    q_pos = q_start + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (per-slot, per-head scales)
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x):
+    """x: [b, s, kvh, hd] -> (int8 values, f16 scales [b, s, kvh]).
+
+    The scale is rounded to f16 BEFORE quantizing so the dequantization
+    error is bounded by scale/2 exactly (hypothesis-tested invariant)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8).astype(jnp.float16)
+    sf = scale.astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / sf[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale):
+    return q.astype(jnp.bfloat16) * scale[..., None].astype(jnp.bfloat16)
+
+
+def decode_attention_quant(
+    q,  # [b, 1, h, hd]
+    k_q, k_s, v_q, v_s,  # int8 caches + f16 scales
+    positions,  # [b]
+    *,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    scale=None,
+    block: int = 4096,
+):
+    """Chunked decode attention over an int8 cache.  The per-slot scales are
+    folded into the score / probability vectors, so the int8 tensors are
+    only ever dot operands (int8-capable MXU on TPU); each scan step
+    dequantizes at most one [block] tile's worth of work."""
+    b, _, h, hd = q.shape
+    S = k_q.shape[1]
+    kvh = k_q.shape[2]
+    group = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    blk = min(block, S)
+    assert S % blk == 0, (S, blk)
+    nblk = S // blk
+
+    qf = q[:, 0].astype(jnp.float32)  # [b, h, hd]
+    pos = positions[:, None]  # [b, 1]
+
+    def step(carry, j):
+        m, l, acc = carry  # [b,h], [b,h], [b,h,hd]
+        kb = jax.lax.dynamic_slice_in_dim(k_q, j * blk, blk, axis=1)
+        ks = jax.lax.dynamic_slice_in_dim(k_s, j * blk, blk, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v_q, j * blk, blk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v_s, j * blk, blk, axis=1)
+        if group > 1:
+            kb = jnp.repeat(kb, group, axis=2)
+            ks = jnp.repeat(ks, group, axis=2)
+            vb = jnp.repeat(vb, group, axis=2)
+            vs = jnp.repeat(vs, group, axis=2)
+        # s = (q . k_i8) * k_scale  — exact (scale is per (b, slot, head))
+        s = jnp.einsum("bhd,bkhd->bhk", qf, kb.astype(jnp.float32))
+        s = s * ks.astype(jnp.float32).transpose(0, 2, 1)
+        s = softcap(s * scale, attn_softcap)
+        idx = j * blk + jnp.arange(blk)[None, :]  # [1, blk]
+        if window > 0:
+            p_slot = pos - jnp.mod(pos - idx, S)
+            valid = (p_slot >= 0) & (p_slot >= pos - window + 1)
+        else:
+            valid = idx <= pos
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        row_ok = m_new > NEG_INF / 2
+        p = jnp.exp(s - m_new[..., None]) * row_ok[..., None]
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        # pv = (p * v_scale) . v_i8 — exact
+        pv = jnp.einsum(
+            "bhk,bkhd->bhd",
+            p * vs.astype(jnp.float32).transpose(0, 2, 1),
+            vb.astype(jnp.float32),
+        )
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h), jnp.float32)
+    a0 = jnp.zeros((b, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nblk))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out[:, None].astype(q.dtype)
+
+
+def cache_update_quant(cache, k_new, v_new, positions, window: int = 0):
+    """Quantize one new (k, v) per request and scatter into the int8 cache."""
+    S = cache["k"].shape[1]
+    slots = jnp.mod(positions, S) if window > 0 else positions
+    b = cache["k"].shape[0]
+    bidx = jnp.arange(b)
+    kq, ks = quantize_kv(k_new)
+    vq, vs = quantize_kv(v_new)
+    return {
+        "k": cache["k"].at[bidx, slots].set(kq[:, 0]),
+        "k_scale": cache["k_scale"].at[bidx, slots].set(ks[:, 0]),
+        "v": cache["v"].at[bidx, slots].set(vq[:, 0]),
+        "v_scale": cache["v_scale"].at[bidx, slots].set(vs[:, 0]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Decode attention against a KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q,  # [b, 1, h, hd]
+    k_cache,  # [b, S, kvh, hd]   (S = full seq or ring-buffer window)
+    v_cache,
+    positions,  # [b] int32: index of the *current* token
+    *,
+    window: int = 0,  # >0 -> cache is a ring buffer of size S == window
+    attn_softcap: float = 0.0,
+    scale: Optional[float] = None,
+):
+    b, _, h, hd = q.shape
+    S = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    group = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    if group > 1:
+        k_cache = jnp.repeat(k_cache, group, axis=2)
+        v_cache = jnp.repeat(v_cache, group, axis=2)
+
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache, preferred_element_type=jnp.float32)
+    s = softcap(s * scale, attn_softcap)
+
+    idx = jnp.arange(S)[None, :]  # [1, S]
+    pos = positions[:, None]  # [b, 1]
+    if window > 0:
+        # slot i holds absolute position p_i = pos - ((pos - i) mod S)
+        p_slot = pos - jnp.mod(pos - idx, S)
+        valid = (p_slot >= 0) & (p_slot >= pos - window + 1)
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def cache_update(k_cache, v_cache, k_new, v_new, positions, window: int = 0):
+    """Scatter one new (k, v) per request into the cache.
+
+    k_new/v_new: [b, 1, kvh, hd]; positions: [b] absolute token index.
+    With ``window>0`` the cache is a ring buffer and the slot is pos % S.
+    """
+    S = k_cache.shape[1]
+    slots = jnp.mod(positions, S) if window > 0 else positions
+    b = k_cache.shape[0]
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, slots].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, slots].set(v_new[:, 0].astype(v_cache.dtype))
+    return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention KV caching (VLM / encoder-decoder decode path)
+# ---------------------------------------------------------------------------
+
+
+def cross_kv(params, context, cfg: ModelConfig):
+    """Precompute cross-attention K/V from the context stream (prefill)."""
+    b, t, _ = context.shape
+    k = dense(params["wk"], context).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(params["wv"], context).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = rmsnorm_apply(params["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+def cross_attention_cached(params, x, ck, cv, cfg: ModelConfig):
+    """Decode-time cross-attention against precomputed K/V (all positions
+    visible).  x: [b, s, d]; ck/cv: [b, t, kvh, hd]."""
+    b, s, _ = x.shape
+    q = dense(params["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q, cfg.norm_eps)
+    t = ck.shape[1]
+    pos = jnp.full((b,), t - 1, jnp.int32)  # all slots valid
+    out = decode_attention(
+        q, ck, cv, pos, window=0, attn_softcap=cfg.attn_softcap,
+        scale=cfg.attn_logit_scale or None,
+    )
+    out = out.reshape(b, s, cfg.q_dim)
+    return dense(params["wo"], out)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (projections + rope + attention + output)
+# ---------------------------------------------------------------------------
+
+
+def attention_apply(
+    params,
+    x,  # [b, s, d]
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    positions=None,  # [b, s] or None -> arange
+    mode: str = "full",  # "full" | "decode"
+    cache: Optional[dict] = None,  # {"k","v"} for decode / cache prefill
+    context=None,  # [b, t, d_ctx] for cross-attention (disables rope on kv)
+    use_rope: bool = True,
+    use_pallas: bool = False,
+):
+    """Returns (out [b,s,d], new_cache or None)."""
+    b, s, d = x.shape
+    q = dense(params["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    kv_src = context if context is not None else x
+    k = dense(params["wk"], kv_src).reshape(b, kv_src.shape[1], cfg.num_kv_heads, cfg.head_dim)
+    v = dense(params["wv"], kv_src).reshape(b, kv_src.shape[1], cfg.num_kv_heads, cfg.head_dim)
+    # pin activation shardings (GSPMD ambiguity under FSDP — sharding/ctx.py)
+    q = shard_act(q, ("batch", "seq", "heads", None))
+    k = shard_act(k, ("batch", "seq", "kv_heads", None))
+    v = shard_act(v, ("batch", "seq", "kv_heads", None))
+
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_apply(params["k_norm"], k, cfg.norm_eps)
+
+    scale = cfg.attn_logit_scale or None
+
+    if context is not None:
+        # cross-attention: no rope, no causal mask, no kv cache growth
+        out = chunked_attention(
+            q, k, v, causal=False, window=0, attn_softcap=cfg.attn_softcap,
+            scale=scale, chunk_q=cfg.attn_chunk, chunk_kv=cfg.attn_chunk,
+        )
+        new_cache = None
+    elif mode == "full":
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        if use_pallas:
+            from repro.kernels.attention import ops as attn_ops
+
+            out = attn_ops.flash_attention(
+                q, k, v, causal=causal, window=window,
+                attn_softcap=cfg.attn_softcap, scale=scale,
+            )
+        else:
+            out = chunked_attention(
+                q, k, v, causal=causal, window=window,
+                attn_softcap=cfg.attn_softcap, scale=scale,
+                chunk_q=cfg.attn_chunk, chunk_kv=cfg.attn_chunk,
+            )
+        new_cache = None
+        if cache is not None:
+            # prefill: write k/v into the cache buffers.  For a ring buffer
+            # (S < s) position p lives in slot p % S, so the last S tokens
+            # are written rolled by (s - S) % S.
+            S = cache["k"].shape[1]
+            quant = "k_scale" in cache
+            srcs = {"k": k, "v": v}
+            if quant:
+                kq, ks = quantize_kv(k)
+                vq, vs = quantize_kv(v)
+                srcs = {"k": kq, "k_scale": ks, "v": vq, "v_scale": vs}
+            new_cache = {}
+            for name, src in srcs.items():
+                if S >= s:
+                    upd = jax.lax.dynamic_update_slice_in_dim(
+                        cache[name], src.astype(cache[name].dtype), 0, axis=1
+                    )
+                else:
+                    shift = (s - S) % S
+                    upd = jnp.roll(src[:, -S:], shift, axis=1).astype(
+                        cache[name].dtype)
+                axes = ("batch", "kv_seq", "kv_heads", None)[: upd.ndim]
+                new_cache[name] = shard_act(upd, axes)
+    else:  # decode
+        assert cache is not None and positions is not None
+        pos = positions if positions.ndim == 1 else positions[:, 0]
+        if use_rope:
+            q = apply_rope(q, pos[:, None], cfg.rope_theta)
+            k = apply_rope(k, pos[:, None], cfg.rope_theta)
+        if "k_scale" in cache:  # int8 cache
+            new_cache = cache_update_quant(cache, k, v, pos, window)
+            new_cache = {
+                n: shard_act(c, ("batch", "kv_seq", "kv_heads", None)[: c.ndim])
+                for n, c in new_cache.items()
+            }
+            out = decode_attention_quant(
+                q, new_cache["k"], new_cache["k_scale"],
+                new_cache["v"], new_cache["v_scale"], pos, window=window,
+                attn_softcap=cfg.attn_softcap, scale=scale,
+            )
+        else:
+            kc, vc = cache_update(cache["k"], cache["v"], k, v, pos, window)
+            kc = shard_act(kc, ("batch", "kv_seq", "kv_heads", None))
+            vc = shard_act(vc, ("batch", "kv_seq", "kv_heads", None))
+            out = decode_attention(
+                q, kc, vc, pos, window=window, attn_softcap=cfg.attn_softcap,
+                scale=scale,
+            )
+            new_cache = {"k": kc, "v": vc}
+
+    out = shard_act(out, ("batch", "seq", "heads", None))
+    out = out.reshape(b, s, cfg.q_dim)
+    o = dense(params["wo"], out)
+    o = shard_act(o, ("batch", "seq", "embed_act"))
+    return o, new_cache

@@ -1,0 +1,49 @@
+"""Token embedding and LM head (optionally tied), vocab-sharded.
+
+The table is padded to ``cfg.padded_vocab`` (lane-aligned, divisible by the
+model axis); logits are sliced back to the true vocab — the paper's
+channel-padding trick ("pad C to the vector width") applied to the vocab.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.nn.param import Param
+from repro.nn.attention import softcap
+from repro.sharding.ctx import shard_act
+
+
+def embedding_spec(cfg: ModelConfig) -> dict:
+    spec = {
+        "tok": Param((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                     init="embed", scale=0.02)
+    }
+    if not cfg.tie_embeddings:
+        spec["head"] = Param((cfg.d_model, cfg.padded_vocab),
+                             ("embed", "vocab"), init="fan_in")
+    return spec
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, scale_by_dim: bool = False):
+    x = params["tok"][tokens]
+    if scale_by_dim:  # gemma convention
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if x.ndim == 3:
+        x = shard_act(x, ("batch", "seq_res", "embed_act"))
+    return x
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["tok"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["head"])
+    if logits.ndim == 3:
+        logits = shard_act(logits, ("batch", "seq", "vocab"))
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask (not slice) the padding — keeps the vocab axis evenly sharded
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits

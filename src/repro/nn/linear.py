@@ -1,0 +1,60 @@
+"""Linear / projection layers.
+
+All projections keep the contraction dimension ("embed") unsharded and shard
+the output feature dimension over the model axis (or vice versa for the
+down-projection) — the standard Megatron 2-collective pattern that GSPMD
+recovers from the parameter shardings.
+
+The bias+activation epilogue here is the pure-jnp twin of the fused Pallas
+matmul kernel in ``repro.kernels.matmul_fused`` (the paper's FC
+acceleration); model code routes through :func:`dense` so the kernel can be
+swapped in on TPU via ``use_pallas``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.nn.param import Param
+
+_ACTS = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": lambda x: x * (1.0 / (1.0 + jnp.exp(-x.astype(jnp.float32)))).astype(x.dtype),
+    "gelu": lambda x: 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3))),
+    "none": lambda x: x,
+}
+
+
+def act_fn(name: str):
+    return _ACTS[name]
+
+
+def linear_spec(
+    d_in: int,
+    d_out: int,
+    in_axis: str = "embed",
+    out_axis: str = "ff",
+    bias: bool = False,
+    init: str = "fan_in",
+    scale: float = 1.0,
+) -> dict:
+    spec = {"w": Param((d_in, d_out), (in_axis, out_axis), init=init, scale=scale)}
+    if bias:
+        spec["b"] = Param((d_out,), (out_axis,), init="zeros", dtype="float32")
+    return spec
+
+
+def dense(params, x, act: str = "none", use_pallas: bool = False):
+    """y = act(x @ w + b).  With ``use_pallas`` the fused TPU kernel is used
+    (only valid on TPU backends; the jnp path is the oracle)."""
+    if use_pallas:
+        from repro.kernels.matmul_fused import ops as mm_ops
+
+        return mm_ops.matmul_fused(
+            x, params["w"], params.get("b"), act=act
+        )
+    y = jnp.einsum("...d,df->...f", x, params["w"])
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return _ACTS[act](y)

@@ -1,0 +1,33 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain 2-matrix MLPs."""
+from __future__ import annotations
+
+from repro.core.config import ModelConfig
+from repro.nn.linear import linear_spec, dense, act_fn
+from repro.sharding.ctx import shard_act
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: int = 0) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_gated:
+        return {
+            "w_gate": linear_spec(d, f, "embed", "ff"),
+            "w_up": linear_spec(d, f, "embed", "ff"),
+            "w_down": linear_spec(f, d, "ff", "embed"),
+        }
+    return {
+        "w_up": linear_spec(d, f, "embed", "ff", bias=True),
+        "w_down": linear_spec(f, d, "ff", "embed", bias=True),
+    }
+
+
+def mlp_apply(params, x, cfg: ModelConfig, use_pallas: bool = False):
+    if cfg.mlp_gated:
+        g = dense(params["w_gate"], x, act=cfg.act, use_pallas=use_pallas)
+        u = dense(params["w_up"], x, use_pallas=use_pallas)
+        h = shard_act(g * u, ("batch", "seq", "ff"))
+        return shard_act(dense(params["w_down"], h, use_pallas=use_pallas),
+                         ("batch", "seq_res", "embed_act"))
+    h = dense(params["w_up"], x, act=cfg.act, use_pallas=use_pallas)
+    h = shard_act(h, ("batch", "seq", "ff"))
+    return shard_act(dense(params["w_down"], h, use_pallas=use_pallas),
+                     ("batch", "seq_res", "embed_act"))

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts with hierarchical capacity-bounded dispatch.
+
+Design (DESIGN.md §5):
+
+* Tokens are viewed as ``[D, T_l, ...]`` where ``D`` = number of data
+  shards.  Routing, sort, and dispatch are *per data-shard group*, so every
+  gather/scatter is batched along the dp-sharded leading axis and stays
+  local under GSPMD — no token tensor is ever all-gathered.
+* Expert weights shard over the model axis either on the expert dim
+  (``shard_mode="expert"``, many small experts) or on each expert's ff dim
+  (``shard_mode="tensor"``, few large experts).
+* Dispatch is sort-based (argsort by expert id + capacity clamp), so the
+  expert matmuls perform exactly ``tokens × top_k × capacity_factor`` worth
+  of FLOPs — HLO FLOPs ≈ active FLOPs, unlike dense one-hot mixing.
+* Training uses ``capacity_factor`` with token dropping (standard); decode
+  uses worst-case capacity (no drops — a dropped token at inference would
+  corrupt a user request).
+
+Aux outputs: load-balance loss (Switch-style) and router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.nn.linear import act_fn
+from repro.nn.param import Param
+from repro.sharding.ctx import shard_act
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    moe = cfg.moe
+    d, f, E = cfg.d_model, moe.d_ff_expert, moe.num_experts
+    e_ax = "experts" if moe.shard_mode == "expert" else None
+    f_ax = None if moe.shard_mode == "expert" else "expert_ff"
+    return {
+        "router": Param((d, E), ("embed", None), init="fan_in", dtype="float32"),
+        "we_gate": Param((E, d, f), (e_ax, "embed", f_ax), init="fan_in"),
+        "we_up": Param((E, d, f), (e_ax, "embed", f_ax), init="fan_in"),
+        "we_down": Param((E, f, d), (e_ax, f_ax, "embed"), init="fan_in"),
+    }
+
+
+def _group_count(tokens: int, dp_size: int) -> int:
+    """Largest divisor of `tokens` that is <= dp_size (handles tiny decode
+    batches where tokens < dp)."""
+    d = min(tokens, dp_size)
+    while tokens % d:
+        d -= 1
+    return d
+
+
+def moe_apply(
+    params,
+    x,  # [b, s, d]
+    cfg: ModelConfig,
+    *,
+    dp_size: int = 1,
+    mode: str = "train",  # "train" | "prefill" | "decode"
+) -> Tuple[jnp.ndarray, dict]:
+    moe = cfg.moe
+    E, k = moe.num_experts, moe.num_experts_per_token
+    b, s, d = x.shape
+    T = b * s
+    D = _group_count(T, dp_size)
+    T_l = T // D
+
+    xf = shard_act(x.reshape(D, T_l, d), ("batch", None, None))
+    logits = jnp.einsum(
+        "gtd,de->gte", xf.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )  # [D, T_l, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    p_k, e_k = jax.lax.top_k(probs, k)  # [D, T_l, k]
+    p_k = p_k / jnp.maximum(jnp.sum(p_k, axis=-1, keepdims=True), 1e-9)
+
+    if mode == "decode":
+        cap = T_l * k  # worst case — no token is ever dropped at decode
+    else:
+        cf = moe.capacity_factor if mode == "train" else moe.eval_capacity_factor
+        cap = max(1, math.ceil(T_l * k * cf / E))
+        cap = min(cap, T_l * k)
+
+    # --- sort-based dispatch (per group) ------------------------------------
+    flat_e = e_k.reshape(D, T_l * k)
+    flat_p = p_k.reshape(D, T_l * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)  # [D, T_l*k]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)
+    pos_in_e = jnp.arange(T_l * k)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=-1
+    )
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, E * cap)  # sentinel=E*cap
+    src_tok = order // k  # source token per sorted entry
+
+    # slot -> source token map (sentinel row T_l = zeros)
+    gidx = jnp.arange(D)[:, None]
+    src_map = jnp.full((D, E * cap + 1), T_l, dtype=jnp.int32)
+    src_map = src_map.at[gidx, slot].set(src_tok.astype(jnp.int32), mode="drop")
+    src_map = src_map[:, : E * cap]
+
+    xf_pad = jnp.concatenate([xf, jnp.zeros((D, 1, d), xf.dtype)], axis=1)
+    buf = jnp.take_along_axis(xf_pad, src_map[..., None], axis=1)  # [D, E*cap, d]
+    buf = buf.reshape(D, E, cap, d)
+    buf = shard_act(buf, ("batch", "experts", None, None))
+
+    # --- expert computation (sharded over the model axis) -------------------
+    act = act_fn(cfg.act)
+    g = jnp.einsum("gecd,edf->gecf", buf, params["we_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, params["we_up"])
+    gu = shard_act(act(g) * u, ("batch", "experts", None, "expert_ff"))
+    y = jnp.einsum("gecf,efd->gecd", gu, params["we_down"])
+    y = shard_act(y, ("batch", "experts", None, None))
+    y = y.reshape(D, E * cap, d)
+    y_pad = jnp.concatenate([y, jnp.zeros((D, 1, d), y.dtype)], axis=1)
+
+    # --- combine -------------------------------------------------------------
+    # slot index for each (token, k) pair in original order (sentinel E*cap)
+    inv_slot = jnp.full((D, T_l * k), E * cap, dtype=jnp.int32)
+    inv_slot = inv_slot.at[gidx, order].set(
+        jnp.where(keep, slot, E * cap).astype(jnp.int32)
+    )
+    picked = jnp.take_along_axis(y_pad, inv_slot[..., None], axis=1)  # [D,T_l*k,d]
+    picked = picked.reshape(D, T_l, k, d)
+    out = jnp.sum(picked * flat_p.reshape(D, T_l, k, 1).astype(picked.dtype), axis=2)
+    out = shard_act(out, ("batch", None, None))
+
+    # --- aux losses ----------------------------------------------------------
+    # Switch-style load balance: E * sum_e f_e * P_e
+    assign = jax.nn.one_hot(e_k, E, dtype=jnp.float32)  # [D,T_l,k,E]
+    f_e = jnp.mean(jnp.sum(assign, axis=2), axis=(0, 1))  # fraction per expert *k
+    P_e = jnp.mean(probs, axis=(0, 1))
+    lb = E * jnp.sum(f_e / k * P_e)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    aux = {
+        "load_balance_loss": moe.load_balance_loss * lb,
+        "router_z_loss": moe.router_z_loss * z,
+        "expert_fraction": f_e / k,
+    }
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Dense reference (tiny shapes only — oracle for tests)
+# ---------------------------------------------------------------------------
+
+
+def moe_reference(params, x, cfg: ModelConfig):
+    """O(T·E·d·f) dense mixing — bitwise-independent oracle for tests."""
+    moe = cfg.moe
+    E, k = moe.num_experts, moe.num_experts_per_token
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    p_k, e_k = jax.lax.top_k(probs, k)
+    p_k = p_k / jnp.maximum(jnp.sum(p_k, axis=-1, keepdims=True), 1e-9)
+    gate = jnp.zeros_like(probs).at[jnp.arange(xf.shape[0])[:, None], e_k].set(p_k)
+    act = act_fn(cfg.act)
+    g = jnp.einsum("td,edf->tef", xf, params["we_gate"])
+    u = jnp.einsum("td,edf->tef", xf, params["we_up"])
+    y = jnp.einsum("tef,efd->ted", act(g) * u, params["we_down"])
+    out = jnp.einsum("ted,te->td", y, gate.astype(y.dtype))
+    return out.reshape(b, s, d)

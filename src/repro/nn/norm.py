@@ -1,0 +1,39 @@
+"""Normalization layers (RMSNorm, LayerNorm) with fp32 statistics."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nn.param import Param
+
+
+def rmsnorm_spec(dim: int) -> dict:
+    return {"scale": Param((dim,), ("embed",), init="ones", dtype="float32")}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6, plus_one: bool = False):
+    """RMSNorm.  ``plus_one=True`` uses the gemma convention scale=(1+w)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * (var + eps) ** -0.5
+    w = params["scale"].astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    return (xf * w).astype(dtype)
+
+
+def layernorm_spec(dim: int) -> dict:
+    return {
+        "scale": Param((dim,), ("embed",), init="ones", dtype="float32"),
+        "bias": Param((dim,), ("embed",), init="zeros", dtype="float32"),
+    }
+
+
+def layernorm_apply(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)

@@ -1,0 +1,84 @@
+"""Parameter descriptors.
+
+A :class:`Param` records shape, logical sharding axes, and initializer for
+one tensor.  Modules build pytrees of Params; :func:`init_tree` materializes
+them, :func:`axes_tree` extracts the logical-axes pytree (which
+``repro.sharding.spec_tree`` maps to PartitionSpecs for a concrete mesh).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Param(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | embed | fan_in
+    scale: float = 1.0
+    dtype: Optional[str] = None
+
+    def check(self) -> "Param":
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        return self
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def _initialize(p: Param, key, default_dtype: str):
+    dtype = jnp.dtype(p.dtype or default_dtype)
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "normal":
+        return (p.scale * jax.random.normal(key, p.shape)).astype(dtype)
+    if p.init == "embed":
+        return (p.scale * jax.random.normal(key, p.shape)).astype(dtype)
+    if p.init == "fan_in":
+        fan_in = p.shape[0] if len(p.shape) >= 2 else max(p.shape[0], 1)
+        # stacked / expert leading dims do not contribute to fan-in
+        if len(p.shape) == 3:
+            fan_in = p.shape[1]
+        std = p.scale / math.sqrt(fan_in)
+        return (std * jax.random.normal(key, p.shape)).astype(dtype)
+    raise ValueError(f"unknown init {p.init!r}")
+
+
+def init_tree(spec, key, default_dtype: str = "bfloat16"):
+    """Materialize a pytree of Params into arrays, splitting `key` per leaf."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec, is_leaf=is_param)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_initialize(p.check(), k, default_dtype) for p, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def axes_tree(spec):
+    """Extract the logical-axes pytree (leaves are tuples of axis names)."""
+    return jax.tree_util.tree_map(lambda p: p.axes, spec, is_leaf=is_param)
+
+
+def shapes_tree(spec):
+    return jax.tree_util.tree_map(lambda p: p.shape, spec, is_leaf=is_param)
+
+
+def stack_spec(spec, n: int, axis_name: Optional[str] = "layers"):
+    """Prepend a stacked (scan) dimension of size `n` to every Param."""
+
+    def f(p: Param) -> Param:
+        return Param((n,) + p.shape, (axis_name,) + p.axes, p.init, p.scale, p.dtype)
+
+    return jax.tree_util.tree_map(f, spec, is_leaf=is_param)
+
+
+def param_count(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))

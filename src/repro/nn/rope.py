@@ -1,0 +1,26 @@
+"""Rotary position embeddings (half-split convention, llama-style)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions [...,] -> (cos, sin) of shape [..., head_dim/2], fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., seq, heads, head_dim]; positions broadcastable to [..., seq].
+
+    Uses the split-halves rotation (x1, x2) -> (x1*c - x2*s, x2*c + x1*s).
+    """
+    head_dim = x.shape[-1]
+    cos, sin = rope_angles(positions, head_dim, theta)  # [..., seq, half]
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)

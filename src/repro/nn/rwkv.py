@@ -1,0 +1,232 @@
+"""RWKV6 ("Finch") — data-dependent-decay linear attention.
+
+Time mixing implements the WKV6 recurrence per 64-wide head:
+
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    o_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)
+
+with per-channel data-dependent decay ``w_t = exp(-exp(w0 + lora(x)))`` and
+data-dependent token-shift interpolation (ddlerp) per RWKV6.  The forward
+pass is *chunked*: within a chunk the pairwise decay products
+``exp(cw_{i-1} - cw_j)`` (always ≤ 1, numerically safe) are computed
+explicitly; across chunks a per-head [hd, hd] state is carried by one
+``lax.scan``.  ``wkv6_reference`` is the per-timestep oracle.
+
+Simplifications vs the released checkpoint (documented in DESIGN.md §7):
+the output group-norm is a per-head RMSNorm; the five ddlerp branches share
+one LoRA trunk with per-branch heads (same parameter budget and dataflow).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.nn.linear import linear_spec, dense
+from repro.nn.norm import rmsnorm_spec, rmsnorm_apply
+from repro.nn.param import Param
+from repro.sharding.ctx import shard_act
+
+_BRANCHES = ("r", "k", "v", "w", "g")
+
+
+def rwkv_dims(cfg: ModelConfig):
+    d = cfg.d_model
+    h = d // cfg.rwkv.head_dim
+    return d, h
+
+
+def rwkv_time_spec(cfg: ModelConfig) -> dict:
+    r = cfg.rwkv
+    d, h = rwkv_dims(cfg)
+    spec = {
+        # ddlerp: shared trunk + per-branch head
+        "mu": Param((len(_BRANCHES), d), (None, "embed"), init="zeros",
+                    dtype="float32"),
+        "mu_x": Param((d,), ("embed",), init="zeros", dtype="float32"),
+        "lora_A": Param((d, len(_BRANCHES) * r.tokenshift_lora),
+                        ("embed", None), init="fan_in", dtype="float32"),
+        "lora_B": Param((len(_BRANCHES), r.tokenshift_lora, d),
+                        (None, None, "embed"), init="zeros", dtype="float32"),
+        # decay lora
+        "w0": Param((d,), ("embed",), init="zeros", dtype="float32"),
+        "w_A": Param((d, r.decay_lora), ("embed", None), init="fan_in",
+                     dtype="float32"),
+        "w_B": Param((r.decay_lora, d), (None, "embed"), init="zeros",
+                     dtype="float32"),
+        "u": Param((d,), ("embed",), init="zeros", dtype="float32"),
+        "wr": linear_spec(d, d, "embed", "ssm_inner"),
+        "wk": linear_spec(d, d, "embed", "ssm_inner"),
+        "wv": linear_spec(d, d, "embed", "ssm_inner"),
+        "wg": linear_spec(d, d, "embed", "ssm_inner"),
+        "wo": linear_spec(d, d, "ssm_inner", "embed"),
+        "out_norm": rmsnorm_spec(cfg.rwkv.head_dim),
+    }
+    return spec
+
+
+def rwkv_channel_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "mu_k": Param((d,), ("embed",), init="zeros", dtype="float32"),
+        "mu_r": Param((d,), ("embed",), init="zeros", dtype="float32"),
+        "wk": linear_spec(d, cfg.d_ff, "embed", "ff"),
+        "wv": linear_spec(cfg.d_ff, d, "ff", "embed"),
+        "wr": linear_spec(d, d, "embed", "embed"),
+    }
+
+
+def _token_shift(x, last: Optional[jnp.ndarray]):
+    """sx_t = x_{t-1} - x_t; `last` is the final token of the previous
+    segment ([b, d]) for streaming decode."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    return prev - x
+
+
+def _ddlerp(params, x, sx):
+    """Data-dependent interpolation producing the 5 branch inputs."""
+    nb = len(_BRANCHES)
+    xf = x.astype(jnp.float32)
+    sxf = sx.astype(jnp.float32)
+    base = xf + sxf * params["mu_x"][None, None]
+    t = jnp.tanh(base @ params["lora_A"])  # [b,s,nb*L]
+    t = t.reshape(*t.shape[:-1], nb, -1)  # [b,s,nb,L]
+    adj = jnp.einsum("bsnl,nld->bsnd", t, params["lora_B"])  # [b,s,nb,d]
+    mix = params["mu"][None, None] + adj  # [b,s,nb,d]
+    out = xf[:, :, None, :] + sxf[:, :, None, :] * mix
+    return tuple(out[:, :, i].astype(x.dtype) for i in range(nb))
+
+
+def _wkv6_chunked(r, k, v, logw, u, chunk: int, state=None):
+    """r,k,v: [b,s,h,e]; logw: [b,s,h,e] (log decay, <0); u: [h,e].
+
+    Returns (o [b,s,h,e], final state [b,h,e,e] with layout [key, value])."""
+    b, s, h, e = r.shape
+    L = min(chunk, s)
+    pad = (-s) % L
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        logw = jnp.pad(logw, z)
+    nc = (s + pad) // L
+    rc = jnp.moveaxis(r.reshape(b, nc, L, h, e), 1, 0).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(b, nc, L, h, e), 1, 0).astype(jnp.float32)
+    vc = jnp.moveaxis(v.reshape(b, nc, L, h, e), 1, 0).astype(jnp.float32)
+    wc = jnp.moveaxis(logw.reshape(b, nc, L, h, e), 1, 0).astype(jnp.float32)
+
+    li = jnp.arange(L)
+    strict = li[:, None] > li[None, :]  # j < i
+
+    def step(S, inp):
+        r_c, k_c, v_c, w_c = inp  # [b,L,h,e]
+        cw = jnp.cumsum(w_c, axis=1)  # inclusive
+        cw_prev = cw - w_c  # cumulative decay up to t-1 (exclusive)
+        # intra-chunk: A[i,j] = sum_e r_i[e] k_j[e] exp(cw_prev_i - cw_j), j<i
+        decay = jnp.exp(
+            cw_prev[:, :, None, :, :] - cw[:, None, :, :, :]
+        )  # [b,I,J,h,e]
+        A = jnp.einsum(
+            "bihe,bijhe,bjhe->bhij", r_c, decay, k_c,
+        )
+        A = jnp.where(strict[None, None], A, 0.0)
+        # diagonal bonus: (r_i ⊙ u ⊙ k_i) v_i
+        diag = jnp.einsum("bihe,he,bihe->bih", r_c, u.astype(jnp.float32), k_c)
+        o = jnp.einsum("bhij,bjhe->bihe", A, v_c)
+        o = o + diag[..., None] * v_c
+        # inter-chunk: o_i += (r_i ⊙ exp(cw_prev_i)) @ S
+        o = o + jnp.einsum("bihe,bhef->bihf", r_c * jnp.exp(cw_prev), S)
+        # state update: S' = diag(exp(cw_L)) S + sum_j exp(cw_L - cw_j) k_j v_j
+        total = cw[:, -1]  # [b,h,e]
+        Sc = jnp.einsum("bjhe,bjhf->bhef", k_c * jnp.exp(total[:, None] - cw), v_c)
+        S_new = S * jnp.exp(total)[..., None] + Sc
+        return S_new, o
+
+    S0 = jnp.zeros((b, h, e, e), jnp.float32) if state is None else state
+    S_final, os_ = jax.lax.scan(step, S0, (rc, kc, vc, wc))
+    o = jnp.moveaxis(os_, 0, 1).reshape(b, s + pad, h, e)[:, :s]
+    return o.astype(r.dtype), S_final
+
+
+def wkv6_reference(r, k, v, logw, u, state=None):
+    """Per-timestep recurrence oracle (fp32)."""
+    b, s, h, e = r.shape
+    S0 = jnp.zeros((b, h, e, e), jnp.float32) if state is None else state
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # [b,h,e]
+        kv = jnp.einsum("bhe,bhf->bhef", k_t, v_t)
+        o = jnp.einsum(
+            "bhe,bhef->bhf", r_t, S + u[None].astype(jnp.float32) [..., None] * kv
+        )
+        S = S * jnp.exp(w_t)[..., None] + kv
+        return S, o
+
+    xs = tuple(
+        jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, logw)
+    )
+    S_final, os_ = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(os_, 0, 1).astype(r.dtype), S_final
+
+
+def rwkv_time_apply(
+    params,
+    x,  # [b, s, d]
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,  # {"last": [b,d], "state": [b,h,e,e]}
+    mode: str = "full",
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    d, h = rwkv_dims(cfg)
+    e = cfg.rwkv.head_dim
+    b, s, _ = x.shape
+    last = cache.get("last") if cache else None
+    sx = _token_shift(x, last)
+    xr, xk, xv, xw, xg = _ddlerp(params, x, sx)
+
+    r = shard_act(dense(params["wr"], xr).reshape(b, s, h, e),
+                  ("batch", "seq", "heads", None))
+    k = shard_act(dense(params["wk"], xk).reshape(b, s, h, e),
+                  ("batch", "seq", "heads", None))
+    v = shard_act(dense(params["wv"], xv).reshape(b, s, h, e),
+                  ("batch", "seq", "heads", None))
+    g = dense(params["wg"], xg)
+    loww = (
+        params["w0"][None, None]
+        + jnp.tanh(xw.astype(jnp.float32) @ params["w_A"]) @ params["w_B"]
+    )
+    logw = -jnp.exp(loww).reshape(b, s, h, e)  # log decay < 0
+    u = params["u"].reshape(h, e)
+
+    state = cache.get("state") if cache else None
+    if mode == "full" and s > 1:
+        o, S_final = _wkv6_chunked(r, k, v, logw, u, cfg.rwkv.chunk_size, state)
+    else:
+        o, S_final = wkv6_reference(r, k, v, logw, u, state)
+
+    o = rmsnorm_apply(params["out_norm"], o, cfg.norm_eps)
+    o = o.reshape(b, s, d) * jax.nn.silu(g)
+    out = dense(params["wo"], o)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"last": x[:, -1].astype(jnp.float32), "state": S_final}
+    return out, new_cache
+
+
+def rwkv_channel_apply(params, x, cfg: ModelConfig, cache: Optional[dict] = None):
+    last = cache.get("last") if cache else None
+    sx = _token_shift(x, last)
+    xf = x.astype(jnp.float32)
+    xk = (xf + sx.astype(jnp.float32) * params["mu_k"]).astype(x.dtype)
+    xr = (xf + sx.astype(jnp.float32) * params["mu_r"]).astype(x.dtype)
+    kk = dense(params["wk"], xk, act="relu")
+    kk = kk * kk
+    vv = dense(params["wv"], kk)
+    rr = jax.nn.sigmoid(dense(params["wr"], xr).astype(jnp.float32)).astype(x.dtype)
+    out = rr * vv
+    new_cache = {"last": x[:, -1].astype(jnp.float32)} if cache is not None else None
+    return out, new_cache

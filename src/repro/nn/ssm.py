@@ -1,0 +1,214 @@
+"""Mamba2 (SSD) block — chunked parallel scan + O(1)-state decode.
+
+The chunked algorithm follows the SSD formulation (Dao & Gu 2024):
+within a chunk the recurrence is computed in attention-like quadratic form;
+across chunks a [heads, head_dim, d_state] state is carried by a short
+``lax.scan``.  This is the temporal analogue of the paper's "advanced SIMD"
+blocking: one loaded chunk of activations is reused for all intra-chunk
+interactions before the state is written back (DESIGN.md §Arch-applicability).
+
+``ssm_scan_reference`` is the naive per-timestep recurrence used as the
+test oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.nn.linear import linear_spec, dense
+from repro.nn.norm import rmsnorm_spec, rmsnorm_apply
+from repro.nn.param import Param
+from repro.sharding.ctx import shard_act
+
+
+def ssm_dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    return d_inner, n_heads
+
+
+def ssm_spec(cfg: ModelConfig) -> dict:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_inner, h = ssm_dims(cfg)
+    n = ssm.d_state
+    # in_proj emits [z, x, B, C, dt]
+    return {
+        "in_proj": linear_spec(d, 2 * d_inner + 2 * n + h, "embed", "ssm_inner"),
+        "conv_w": Param((ssm.d_conv, d_inner + 2 * n), (None, "ssm_inner"),
+                        init="fan_in"),
+        "conv_b": Param((d_inner + 2 * n,), ("ssm_inner",), init="zeros",
+                        dtype="float32"),
+        "A_log": Param((h,), (None,), init="zeros", dtype="float32"),
+        "D": Param((h,), (None,), init="ones", dtype="float32"),
+        "dt_bias": Param((h,), (None,), init="zeros", dtype="float32"),
+        "out_norm": rmsnorm_spec(d_inner),
+        "out_proj": linear_spec(d_inner, d, "ssm_inner", "embed"),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner, h = ssm_dims(cfg)
+    n = ssm.d_state
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt  # xbc = [x, B, C] convolved together
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv over time.  xbc: [b, s, c]; w: [K, c].
+
+    With ``state`` ([b, K-1, c], the trailing inputs of the previous call)
+    performs the streaming update and returns (y, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [b, s+K-1, c]
+    y = sum(xp[:, i : i + xbc.shape[1]] * w[i][None, None] for i in range(K))
+    y = y + b.astype(y.dtype)
+    new_state = xp[:, -(K - 1) :]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """x: [b,s,h,p], dt: [b,s,h] (post-softplus), A: [h] (<0),
+    B, C: [b,s,n].  Returns y [b,s,h,p] and final state [b,h,p,n].
+
+    Chunks are processed *sequentially* by one lax.scan carrying the state,
+    so peak memory is O(b·L²·h) for a single chunk, never O(b·nc·L²·h).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    L = min(chunk, s)
+    pad = (-s) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // L
+    # scan-major layout: [nc, b, L, ...]
+    xc = jnp.moveaxis(x.reshape(b, nc, L, h, p), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, L, h), 1, 0).astype(jnp.float32)
+    Bc = jnp.moveaxis(B.reshape(b, nc, L, n), 1, 0)
+    Cc = jnp.moveaxis(C.reshape(b, nc, L, n), 1, 0)
+
+    li = jnp.arange(L)
+    causal = li[:, None] >= li[None, :]
+
+    def step(S, inp):
+        x_c, dt_c, B_c, C_c = inp  # [b,L,h,p], [b,L,h], [b,L,n], [b,L,n]
+        dA = dt_c * A[None, None, :]  # [b,L,h] (negative)
+        cs = jnp.cumsum(dA, axis=1)  # inclusive cumulative log-decay
+        scores = jnp.einsum("bln,bmn->blm", C_c, B_c,
+                            preferred_element_type=jnp.float32)
+        # decay from step m (exclusive) to step l (inclusive)
+        M = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # [b,L,M,h]
+        M = jnp.where(causal[None, :, :, None], M, 0.0)
+        W = scores[..., None] * M * dt_c[:, None, :, :]  # [b,L,M,h]
+        y = jnp.einsum("blmh,bmhp->blhp", W, x_c.astype(jnp.float32))
+        # contribution of the state entering this chunk
+        y = y + jnp.einsum(
+            "bln,bhpn,blh->blhp", C_c.astype(jnp.float32), S, jnp.exp(cs)
+        )
+        # end-of-chunk state
+        decay_to_end = jnp.exp(cs[:, -1:, :] - cs)  # [b,L,h]
+        Sc = jnp.einsum(
+            "bln,blh,blhp->bhpn",
+            B_c.astype(jnp.float32),
+            decay_to_end * dt_c,
+            x_c.astype(jnp.float32),
+        )
+        S_new = S * jnp.exp(cs[:, -1, :])[:, :, None, None] + Sc
+        return S_new, y.astype(x_c.dtype)
+
+    S0 = jnp.zeros((b, h, p, n), jnp.float32)
+    S_final, ys = jax.lax.scan(step, S0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s + pad, h, p)[:, :s]
+    return y, S_final
+
+
+def ssm_apply(
+    params,
+    x,  # [b, s, d]
+    cfg: ModelConfig,
+    *,
+    mode: str = "full",  # "full" | "decode"
+    cache: Optional[dict] = None,  # {"conv": [b,K-1,c], "state": [b,h,p,n]}
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    ssm = cfg.ssm
+    d_inner, h = ssm_dims(cfg)
+    n = ssm.d_state
+    p = ssm.head_dim
+
+    proj = dense(params["in_proj"], x)
+    proj = shard_act(proj, ("batch", "seq", "ssm_inner"))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])  # [h], negative
+
+    conv_state = cache.get("conv") if cache else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    bsz, s, _ = x.shape
+    xh = xs.reshape(bsz, s, h, p)
+
+    if mode == "full":
+        y, S_final = _ssd_chunked(xh, dt, A, B, C, ssm.chunk_size)
+        new_cache = (
+            {"conv": new_conv, "state": S_final} if cache is not None else None
+        )
+    else:  # decode: s == 1
+        S = cache["state"]  # [b,h,p,n]
+        dA = jnp.exp(dt[:, 0] * A[None, :])  # [b,h]
+        dBx = jnp.einsum(
+            "bn,bh,bhp->bhpn", B[:, 0].astype(jnp.float32), dt[:, 0],
+            xh[:, 0].astype(jnp.float32),
+        )
+        S = S * dA[:, :, None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), S)
+        y = y[:, None].astype(x.dtype)
+        new_cache = {"conv": new_conv, "state": S}
+
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, s, d_inner)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_apply(params["out_norm"], y, cfg.norm_eps)
+    return shard_act(dense(params["out_proj"], y),
+                     ("batch", "seq", "embed_act")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Naive per-step recurrence — test oracle
+# ---------------------------------------------------------------------------
+
+
+def ssd_reference(x, dt, A, B, C):
+    """Same inputs as _ssd_chunked; per-timestep lax.scan recurrence."""
+    b, s, h, p = x.shape
+
+    def step(S, inp):
+        x_t, dt_t, B_t, C_t = inp  # [b,h,p], [b,h], [b,n], [b,n]
+        dA = jnp.exp(dt_t * A[None, :])  # [b,h]
+        S = S * dA[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhpn", B_t, dt_t, x_t
+        )
+        y = jnp.einsum("bn,bhpn->bhp", C_t, S)
+        return S, y
+
+    S0 = jnp.zeros((b, h, p, B.shape[-1]), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+    )
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S_final

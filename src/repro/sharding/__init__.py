@@ -1,0 +1,17 @@
+from repro.sharding.rules import (
+    AxisRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    spec_tree,
+    batch_spec,
+    kv_cache_spec,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "logical_to_spec",
+    "spec_tree",
+    "batch_spec",
+    "kv_cache_spec",
+]

@@ -1,0 +1,50 @@
+"""Activation-sharding context.
+
+GSPMD propagation alone is ambiguous when FSDP weight sharding and batch
+sharding share the data axis (an einsum whose operands are both sharded on
+'data' can be resolved by replicating either side — for qwen1.5 it chose to
+replicate *activations*, cascading into a fully-replicated 640 GB KV cache;
+EXPERIMENTS.md §Dry-run).  Production JAX frameworks pin activations with
+``with_sharding_constraint`` at block boundaries; this module provides the
+plumbing without threading mesh/rules through every model signature.
+
+``activation_sharding(mesh_axes, rules)`` installs a context; model code
+calls ``shard_act(x, logical_axes)`` which is a no-op when no context is
+installed (plain CPU tests) and a sharding constraint under the dry-run /
+launcher.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+from repro.sharding.rules import AxisRules, logical_to_spec
+
+_CTX: contextvars.ContextVar[Optional[Tuple[Tuple[str, ...], AxisRules]]] = (
+    contextvars.ContextVar("activation_sharding", default=None)
+)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh_axes: Sequence[str], rules: AxisRules):
+    token = _CTX.set((tuple(mesh_axes), rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def shard_act(x, logical_axes: Sequence[Optional[str]]):
+    """Constrain activation `x` to the logical axes under the active rules;
+    identity when no context is installed."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh_axes, rules = ctx
+    if len(logical_axes) != x.ndim:
+        return x
+    spec = logical_to_spec(logical_axes, mesh_axes, rules)
+    return jax.lax.with_sharding_constraint(x, spec)

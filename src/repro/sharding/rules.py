@@ -1,0 +1,129 @@
+"""Logical-axis sharding rules.
+
+Model code annotates parameters and activations with *logical* axis names
+("embed", "heads", "ff", "experts", ...).  A single table maps logical names
+to physical mesh axes, so changing the distribution strategy is a one-line
+edit here — never a model-code edit.  This is the same design used by
+production JAX frameworks (MaxText/T5X "logical axis rules").
+
+Physical axes: "pod" (slow inter-pod ICI), "data", "model".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+# Logical axis -> physical mesh axis (or tuple of axes, or None=replicated).
+_DEFAULT_TABLE: Dict[str, object] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_res": None,  # residual-stream sequence axis (Megatron-SP variant
+    #                   maps it to "model"; attention regions keep "seq")
+    "kv_seq": None,  # switched to ("pod","data") for tiny-batch long context
+    "embed_act": None,
+    # params
+    "embed": None,  # d_model rows of projections
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",  # MoE shard_mode="expert"
+    "expert_ff": "model",  # MoE shard_mode="tensor"
+    "ssm_inner": "model",  # mamba/rwkv expanded inner dim
+    "media": None,
+    "layers": None,  # scan-stacked leading layer axis
+    "zero": ("pod", "data"),  # ZeRO-1 optimizer-state sharding axis
+    "fsdp": None,  # flipped to ("pod","data") for very large models
+    "none": None,
+}
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    table: Tuple[Tuple[str, object], ...] = tuple(sorted(_DEFAULT_TABLE.items()))
+
+    def lookup(self, name: Optional[str]) -> object:
+        if name is None:
+            return None
+        d = dict(self.table)
+        if name not in d:
+            raise KeyError(f"unknown logical axis {name!r}")
+        return d[name]
+
+    def replace(self, **kv) -> "AxisRules":
+        d = dict(self.table)
+        d.update(kv)
+        return AxisRules(tuple(sorted(d.items())))
+
+
+DEFAULT_RULES = AxisRules()
+
+
+def _filter_axes(entry: object, mesh_axes: Sequence[str]) -> object:
+    """Drop physical axes not present in the current mesh (e.g. 'pod' on the
+    single-pod mesh)."""
+    if entry is None:
+        return None
+    if isinstance(entry, tuple):
+        kept = tuple(a for a in entry if a in mesh_axes)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return entry if entry in mesh_axes else None
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    mesh_axes: Sequence[str],
+    rules: AxisRules = DEFAULT_RULES,
+) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec for this mesh."""
+    return P(*[_filter_axes(rules.lookup(n), mesh_axes) for n in logical_axes])
+
+
+def spec_tree(logical_tree, mesh_axes, rules: AxisRules = DEFAULT_RULES):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda ax: logical_to_spec(ax, mesh_axes, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def batch_spec(mesh_axes: Sequence[str], rules: AxisRules = DEFAULT_RULES) -> P:
+    """Sharding of a [batch, seq, ...] activation."""
+    return logical_to_spec(("batch", "seq"), mesh_axes, rules)
+
+
+def kv_cache_spec(
+    batch: int,
+    num_kv_heads: int,
+    dp_size: int,
+    model_size: int,
+    mesh_axes: Sequence[str],
+    rules: AxisRules = DEFAULT_RULES,
+) -> P:
+    """Choose KV-cache sharding: [batch, seq, kv_heads, head_dim].
+
+    - batch >= dp  : shard batch over dp; heads over model if divisible,
+                     else shard the sequence over model.
+    - batch <  dp  : (long_500k b=1) shard the *sequence* over dp, heads over
+                     model if divisible.
+    """
+    dp = _filter_axes(rules.lookup("batch"), mesh_axes)
+    model = _filter_axes(rules.lookup("heads"), mesh_axes)
+    heads_ok = model is None or (num_kv_heads % max(model_size, 1) == 0)
+    if batch >= dp_size and batch % max(dp_size, 1) == 0:
+        if heads_ok:
+            return P(dp, None, model, None)
+        return P(dp, model, None, None)
+    # tiny batch: shard sequence over dp
+    if heads_ok:
+        return P(None, dp, model, None)
+    return P(None, (dp, model) if model is not None and dp is not None else dp, None, None)

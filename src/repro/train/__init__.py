@@ -1,0 +1,10 @@
+from repro.train.optimizer import adamw_init_spec, adamw_init, adamw_update
+from repro.train.step import make_train_step, cross_entropy
+
+__all__ = [
+    "adamw_init_spec",
+    "adamw_init",
+    "adamw_update",
+    "make_train_step",
+    "cross_entropy",
+]

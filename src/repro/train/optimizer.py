@@ -1,0 +1,118 @@
+"""AdamW with fp32 moments, global-norm clipping, and ZeRO-1 sharding.
+
+Moments are described as Param trees so the sharding machinery applies.
+With ``zero1=True`` each moment tensor additionally shards its largest
+dp-divisible replicated axis over the data axes (logical axis "zero") —
+optimizer state per device drops by ~dp×, which is what makes grok-1-314b
+trainable on a 16 GB/chip pod (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import TrainConfig
+from repro.nn.param import Param, is_param
+
+
+# logical axes that may already be mapped to the dp mesh axes — a second
+# dp-sharded axis in the same spec would collide (GSPMD allows each mesh
+# axis on at most one positional dimension)
+_DP_LOGICAL = ("batch", "zero", "embed")
+
+
+def _zero1_axes(p: Param, dp_size: int, dp_logical=("batch", "zero")) -> Param:
+    """Shard the largest still-replicated axis over the dp axes."""
+    if any(a in dp_logical for a in p.axes):
+        return p  # already dp-sharded somewhere (e.g. FSDP'd "embed")
+    best, best_size = -1, 0
+    for i, (ax, size) in enumerate(zip(p.axes, p.shape)):
+        if ax is None and size % dp_size == 0 and size > best_size:
+            best, best_size = i, size
+    if best < 0:
+        return p
+    axes = tuple("zero" if i == best else a for i, a in enumerate(p.axes))
+    return Param(p.shape, axes, p.init, p.scale, p.dtype)
+
+
+def adamw_init_spec(param_spec, zero1: bool = True, dp_size: int = 1,
+                    fsdp: bool = False, moment_dtype: str = "float32") -> dict:
+    """Moment specs mirroring the parameter spec.
+
+    With ``fsdp`` the "embed" axis is already dp-sharded, so ZeRO-1 must not
+    add a second dp axis.  ``moment_dtype`` supports the documented bf16-
+    optimizer variant for grok-1-scale models (EXPERIMENTS.md §Dry-run)."""
+    dp_logical = ("batch", "zero", "embed") if fsdp else ("batch", "zero")
+
+    def moment(p: Param) -> Param:
+        m = Param(p.shape, p.axes, init="zeros", dtype=moment_dtype)
+        return (_zero1_axes(m, dp_size, dp_logical)
+                if zero1 and dp_size > 1 else m)
+
+    return {
+        "m": jax.tree_util.tree_map(moment, param_spec, is_leaf=is_param),
+        "v": jax.tree_util.tree_map(moment, param_spec, is_leaf=is_param),
+        "step": Param((), (), init="zeros", dtype="int32"),
+    }
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t
+    )
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def lr_schedule(step, tcfg: TrainConfig) -> jnp.ndarray:
+    """Linear warmup then cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - tcfg.warmup_steps) / max(tcfg.total_steps - tcfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.learning_rate * warm * cos
+
+
+def adamw_update(
+    grads, opt_state, params, tcfg: TrainConfig
+) -> Tuple[dict, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(step, tcfg)
+    b1, b2, eps = tcfg.b1, tcfg.b2, tcfg.eps
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        if p.ndim >= 2:  # no weight decay on norms/biases/scalars
+            u = u + tcfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

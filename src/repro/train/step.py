@@ -1,0 +1,117 @@
+"""Train-step builder: loss, grads, optimizer update — one jit-able function."""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, TrainConfig
+from repro.train.optimizer import adamw_update
+
+
+def cross_entropy(logits, labels, vocab_size: int) -> jnp.ndarray:
+    """Mean CE over all tokens.  logits fp32 [b,s,V_padded]; labels [b,s].
+
+    The gold logit is extracted with a masked reduction (NOT
+    ``take_along_axis``): a gather along the vocab axis would force GSPMD to
+    all-gather the vocab-sharded logits (~67 GB/device at train_4k scale);
+    the masked sum keeps every op sharded exactly like the logits.
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    gold = jnp.sum(
+        jnp.where(labels[..., None] == vocab_iota, logits, 0.0), axis=-1
+    )
+    return jnp.mean(lse - gold)
+
+
+def make_loss_fn(model, *, dp_size: int = 1, window_override: int = 0,
+                 use_pallas: bool = False) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(
+            params, batch, mode="train", dp_size=dp_size,
+            window_override=window_override, use_pallas=use_pallas,
+        )
+        ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        loss = ce
+        metrics = {"ce": ce}
+        for k in ("load_balance_loss", "router_z_loss"):
+            if k in aux:
+                loss = loss + aux[k]
+                metrics[k] = aux[k]
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model, tcfg: TrainConfig, *, dp_size: int = 1,
+                    window_override: int = 0, microbatches: int = 1,
+                    grad_acc_dtype: str = "float32",
+                    use_pallas: bool = False) -> Callable:
+    """With ``microbatches > 1`` the global batch is split along the batch
+    axis and gradients are accumulated by a ``lax.scan`` (activation memory
+    scales 1/k; the split is strided — ``reshape(b//k, k, s)`` — so each
+    microbatch keeps the full data-parallel sharding of the batch axis)."""
+    loss_fn = make_loss_fn(model, dp_size=dp_size,
+                           window_override=window_override,
+                           use_pallas=use_pallas)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (_, metrics), grads = grads_of(params, batch)
+        else:
+            k = microbatches
+
+            def split(x):
+                b = x.shape[0]
+                assert b % k == 0, (b, k)
+                xr = x.reshape(b // k, k, *x.shape[1:])
+                return jnp.moveaxis(xr, 1, 0)  # [k, b//k, ...]
+
+            mbs = jax.tree_util.tree_map(split, batch)
+
+            def mb_step(acc, mb):
+                g_acc, m_acc = acc
+                (_, metrics), g = grads_of(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(a.dtype), g_acc, g)
+                m_acc = jax.tree_util.tree_map(lambda a, b_: a + b_,
+                                               m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            acc_dt = jnp.dtype(grad_acc_dtype)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (grads, metrics), _ = jax.lax.scan(
+                mb_step, (g0, _zero_metrics(model)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m / k, metrics)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, tcfg
+        )
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def _zero_metrics(model) -> dict:
+    # scan_layers always emits the two aux-loss accumulators (zero for
+    # non-MoE models), so the metric structure is uniform across families.
+    return {k: jnp.zeros((), jnp.float32) for k in
+            ("ce", "loss", "load_balance_loss", "router_z_loss")}
+
+
+def default_microbatches(tokens: int, dp_size: int,
+                         max_local_tokens: int = 8_192) -> int:
+    """Pick the accumulation factor so each device sees <= max_local_tokens
+    activations at a time; must divide the per-shard batch."""
+    k = max(1, -(-tokens // (dp_size * max_local_tokens)))
+    return k

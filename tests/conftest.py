@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single CPU device (smoke tests and benches must see 1
+# device; only launch/dryrun.py forces 512 — see the assignment contract).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,99 @@
+"""Chunked flash attention (jnp twin): forward, custom-VJP gradients,
+masks, GQA, decode paths, int8 KV cache."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.nn.attention import (
+    chunked_attention,
+    reference_attention,
+    decode_attention,
+    decode_attention_quant,
+    cache_update,
+    quantize_kv,
+)
+
+
+def _qkv(b=2, s=37, h=8, kvh=4, hd=16, skv=None):
+    skv = skv or s
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, skv, kvh, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, skv, kvh, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 9])
+@pytest.mark.parametrize("cap", [0.0, 5.0])
+def test_forward_and_grads_match_reference(causal, window, cap):
+    q, k, v = _qkv()
+
+    def f(fn):
+        return lambda q, k, v: jnp.sum(jnp.sin(fn(
+            q, k, v, causal=causal, window=window, attn_softcap=cap)))
+
+    f1 = f(lambda *a, **kw: chunked_attention(*a, chunk_q=8, chunk_kv=8, **kw))
+    f2 = f(reference_attention)
+    assert abs(float(f1(q, k, v) - f2(q, k, v))) < 1e-4
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        assert jnp.max(jnp.abs(a - b_)) < 1e-4
+
+
+def test_rectangular_cross_attention_grads():
+    q, k, v = _qkv(s=13, skv=29)
+    f1 = lambda q, k, v: jnp.sum(chunked_attention(
+        q, k, v, causal=False, chunk_q=8, chunk_kv=8) ** 2)
+    f2 = lambda q, k, v: jnp.sum(reference_attention(q, k, v, causal=False) ** 2)
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        assert jnp.max(jnp.abs(a - b_)) < 1e-4
+
+
+def test_decode_matches_full_attention():
+    """Decoding token t against a cache == row t of full causal attention."""
+    b, s, h, kvh, hd = 2, 10, 4, 2, 16
+    q, k, v = _qkv(b, s, h, kvh, hd)
+    full = reference_attention(q, k, v, causal=True)
+    kc = jnp.zeros((b, s, kvh, hd))
+    vc = jnp.zeros((b, s, kvh, hd))
+    for t in range(s):
+        pos = jnp.full((b,), t, jnp.int32)
+        kc, vc = cache_update(kc, vc, k[:, t:t+1], v[:, t:t+1], pos)
+        out = decode_attention(q[:, t:t+1], kc, vc, pos)
+        assert jnp.max(jnp.abs(out[:, 0] - full[:, t])) < 1e-5
+
+
+def test_ring_buffer_decode_matches_windowed_attention():
+    b, s, h, kvh, hd, w = 1, 12, 2, 2, 8, 4
+    q, k, v = _qkv(b, s, h, kvh, hd)
+    full = reference_attention(q, k, v, causal=True, window=w)
+    kc = jnp.zeros((b, w, kvh, hd))
+    vc = jnp.zeros((b, w, kvh, hd))
+    for t in range(s):
+        pos = jnp.full((b,), t, jnp.int32)
+        kc, vc = cache_update(kc, vc, k[:, t:t+1], v[:, t:t+1], pos, window=w)
+        out = decode_attention(q[:, t:t+1], kc, vc, pos, window=w)
+        assert jnp.max(jnp.abs(out[:, 0] - full[:, t])) < 1e-5, t
+
+
+def test_quantized_decode_close_to_fp():
+    b, s, h, kvh, hd = 2, 16, 4, 2, 32
+    q, k, v = _qkv(b, s, h, kvh, hd)
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    fp = decode_attention(q[:, -1:], k, v, pos)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    qt = decode_attention_quant(q[:, -1:], kq, ks, vq, vs, pos, block=8)
+    assert jnp.max(jnp.abs(fp - qt)) < 0.05
+
+
+def test_quantize_kv_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 3, 16)) * 3.0
+    qv, sc = quantize_kv(x)
+    deq = qv.astype(jnp.float32) * sc.astype(jnp.float32)[..., None]
+    # rounding error is at most half a quantization step per element
+    bound = sc.astype(jnp.float32)[..., None] * 0.5 + 1e-5
+    assert bool(jnp.all(jnp.abs(deq - x) <= bound + 1e-3))

@@ -1,0 +1,119 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes per the assignment contract."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.conv2d.ops import conv2d as conv2d_pallas
+from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.matmul_fused.ops import matmul_fused
+from repro.kernels.matmul_fused.ref import matmul_fused_ref
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import flash_attention_ref
+
+CONV_METHODS = ("basic_parallel", "basic_simd", "advanced_simd_4",
+                "advanced_simd_128")
+CONV_SHAPES = [
+    # (n, c, h, w, oc, k, stride, pad)
+    (2, 3, 16, 16, 8, 3, 1, 1),
+    (1, 4, 12, 12, 6, 5, 2, 0),
+    (1, 3, 28, 28, 20, 5, 1, 0),  # LeNet conv1
+    (2, 16, 13, 13, 32, 3, 1, 1),
+    (1, 8, 9, 9, 8, 1, 1, 0),  # 1x1 conv
+]
+
+
+@pytest.mark.parametrize("method", CONV_METHODS)
+@pytest.mark.parametrize("shape", CONV_SHAPES)
+def test_conv2d_kernel_vs_ref(method, shape):
+    n, c, h, w_, oc, k, s, p = shape
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, c, h, w_), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (oc, c, k, k)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(2), (oc,))
+    ref = conv2d_ref(x, w, b, (s, s), (p, p), relu=True)
+    out = conv2d_pallas(x, w, b, (s, s), (p, p), relu=True, method=method,
+                        interpret=True)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_conv2d_kernel_dtypes(dtype):
+    dt = jnp.dtype(dtype)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 10, 10)).astype(dt)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (8, 4, 3, 3)) * 0.1).astype(dt)
+    b = jnp.zeros((8,), jnp.float32)
+    ref = conv2d_ref(x, w, b, (1, 1), (1, 1))
+    out = conv2d_pallas(x, w, b, (1, 1), (1, 1), method="advanced_simd_128",
+                        interpret=True)
+    tol = 1e-4 if dtype == "float32" else 5e-2
+    assert jnp.max(jnp.abs(out.astype(jnp.float32)
+                           - ref.astype(jnp.float32))) < tol
+
+
+@pytest.mark.parametrize("mkn", [(64, 64, 64), (100, 300, 200), (7, 9, 11),
+                                 (1, 1024, 1), (128, 128, 384)])
+@pytest.mark.parametrize("act", ["none", "relu", "silu", "gelu"])
+def test_matmul_fused_vs_ref(mkn, act):
+    m, k, n = mkn
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
+    b = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    out = matmul_fused(x, w, b, act=act, interpret=True)
+    ref = matmul_fused_ref(x, w, b, act=act)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+def test_matmul_fused_bf16_and_nobias():
+    x = jax.random.normal(jax.random.PRNGKey(0), (33, 65)).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (65, 17)).astype(jnp.bfloat16)
+    out = matmul_fused(x, w, None, interpret=True)
+    ref = matmul_fused_ref(x, w, None)
+    assert jnp.max(jnp.abs(out.astype(jnp.float32)
+                           - ref.astype(jnp.float32))) < 0.15
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 17])
+@pytest.mark.parametrize("cap", [0.0, 8.0])
+def test_flash_attention_kernel(causal, window, cap):
+    b, s, h, kvh, hd = 2, 100, 4, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, hd))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          attn_softcap=cap, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window,
+                              attn_softcap=cap)
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+@pytest.mark.parametrize("shape", [(1, 64, 8, 8, 16), (3, 33, 2, 1, 64)])
+def test_flash_attention_kernel_shapes(shape):
+    b, s, h, kvh, hd = shape
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, hd))
+    out = flash_attention(q, k, v, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+@pytest.mark.parametrize("shape", [(2, 50, 3, 16), (1, 32, 2, 64),
+                                   (3, 17, 1, 8)])
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_wkv6_kernel_vs_recurrence(shape, chunk):
+    """WKV6 chunked kernel (interpret) vs the per-timestep oracle, including
+    non-multiple sequence lengths (ring padding must not perturb the state)."""
+    from repro.kernels.wkv6.ops import wkv6
+    from repro.kernels.wkv6.ref import wkv6_reference
+
+    b, s, h, e = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], shape)
+    k = jax.random.normal(ks[1], shape)
+    v = jax.random.normal(ks[2], shape)
+    logw = -jnp.exp(jax.random.normal(ks[3], shape) * 0.5)
+    u = jax.random.normal(ks[4], (h, e))
+    out = wkv6(r, k, v, logw, u, chunk=chunk, interpret=True)
+    ref, _ = wkv6_reference(r, k, v, logw, u)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4

@@ -1,0 +1,96 @@
+"""Paper-core tests: the CNNdroid engine, method ladder, and deployment."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.deploy import save_model, load_model
+from repro.core.engine import CNNEngine
+from repro.core.methods import Method, LADDER, conv2d, fc_seq_ref, fc_fused
+from repro.core.netdefs import NETWORKS
+from repro.core.layout import (
+    nchw_to_nhwc, nhwc_to_nchw, oihw_to_hwio, hwio_to_oihw, pad_axis,
+    unpad_axis,
+)
+
+
+@pytest.fixture(scope="module", params=["lenet5", "cifar10"])
+def net_and_params(request):
+    net = NETWORKS[request.param]()
+    eng = CNNEngine(net, method=Method.SEQ_REF)
+    params = eng.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, *net.input_shape),
+                          jnp.float32)
+    ref = eng.forward(params, x)
+    return net, params, x, ref
+
+
+@pytest.mark.parametrize("method", LADDER[1:])
+def test_ladder_methods_match_sequential(net_and_params, method):
+    """Every acceleration method computes the same network output as the
+    §4.1 sequential reference (the paper's correctness contract)."""
+    net, params, x, ref = net_and_params
+    out = CNNEngine(net, method=method).forward(params, x)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+def test_output_is_distribution(net_and_params):
+    net, params, x, ref = net_and_params
+    assert ref.shape == (4, net.num_classes)
+    assert jnp.allclose(jnp.sum(ref, axis=-1), 1.0, atol=1e-5)
+
+
+def test_per_layer_method_selection(net_and_params):
+    net, params, x, ref = net_and_params
+    conv_names = [l.name for l in net.layers if l.kind == "conv"]
+    eng = CNNEngine(net, method=Method.ADVANCED_SIMD_8,
+                    per_layer_methods={conv_names[0]: Method.BASIC_SIMD})
+    assert jnp.max(jnp.abs(eng.forward(params, x) - ref)) < 1e-4
+
+
+def test_deploy_roundtrip(tmp_path, net_and_params):
+    net, params, x, ref = net_and_params
+    save_model(tmp_path / "m", net, params, {"note": "test"})
+    net2, params2, extra = load_model(tmp_path / "m")
+    assert extra["note"] == "test"
+    out = CNNEngine(net2, method=Method.ADVANCED_SIMD_4).forward(params2, x)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+def test_deploy_detects_corruption(tmp_path, net_and_params):
+    import numpy as np
+
+    net, params, x, ref = net_and_params
+    save_model(tmp_path / "m", net, params)
+    data = dict(np.load(tmp_path / "m" / "weights.npz"))
+    key = sorted(data)[0]
+    data[key] = data[key] + 1.0
+    np.savez(tmp_path / "m" / "weights.npz", **data)
+    with pytest.raises(ValueError, match="checksum"):
+        load_model(tmp_path / "m")
+
+
+def test_alexnet_shapes():
+    net = NETWORKS["alexnet"]()
+    eng = CNNEngine(net, method=Method.ADVANCED_SIMD_8)
+    params = eng.init(jax.random.PRNGKey(0))
+    out = eng.forward(params, jnp.ones((1, *net.input_shape), jnp.float32))
+    assert out.shape == (1, 1000)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_fc_ladder():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32)) * 0.1
+    b = jnp.ones((32,))
+    assert jnp.max(jnp.abs(fc_fused(x, w, b, relu=True)
+                           - fc_seq_ref(x, w, b, relu=True))) < 1e-5
+
+
+def test_layout_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 5, 7))
+    assert jnp.array_equal(nhwc_to_nchw(nchw_to_nhwc(x)), x)
+    k = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 5, 5))
+    assert jnp.array_equal(hwio_to_oihw(oihw_to_hwio(k)), k)
+    xp, orig = pad_axis(nchw_to_nhwc(x), 3, 8)
+    assert xp.shape[3] == 8 and orig == 3
+    assert jnp.array_equal(unpad_axis(xp, 3, orig), nchw_to_nhwc(x))

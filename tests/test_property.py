@@ -1,0 +1,92 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import nchw_to_nhwc, nhwc_to_nchw, pad_axis, unpad_axis
+from repro.core.methods import Method, conv2d
+from repro.nn.attention import chunked_attention, reference_attention
+from repro.nn.attention import quantize_kv
+from repro.train.step import cross_entropy
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(n=st.integers(1, 3), c=st.integers(1, 6), h=st.integers(5, 12),
+       oc=st.integers(1, 6), k=st.sampled_from([1, 3, 5]),
+       stride=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1))
+def test_conv_ladder_agreement_property(n, c, h, oc, k, stride, seed):
+    """For any shape, every ladder method equals the sequential reference."""
+    if h < k:
+        return
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (n, c, h, h), jnp.float32)
+    w = jax.random.normal(ks[1], (oc, c, k, k)) * 0.2
+    b = jax.random.normal(ks[2], (oc,))
+    ref = conv2d(x, w, b, Method.SEQ_REF, (stride, stride), (0, 0), True)
+    for m in (Method.BASIC_SIMD, Method.ADVANCED_SIMD_8):
+        out = conv2d(x, w, b, m, (stride, stride), (0, 0), True)
+        assert jnp.max(jnp.abs(out - ref)) < 1e-3
+
+
+@given(b=st.integers(1, 3), s=st.integers(2, 40),
+       chunk=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_chunked_attention_chunk_invariance(b, s, chunk, seed):
+    """Output must not depend on the chunking used (any chunk size equals
+    the reference)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    h, kvh, hd = 4, 2, 8
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kvh, hd))
+    v = jax.random.normal(ks[2], (b, s, kvh, hd))
+    out = chunked_attention(q, k, v, chunk_q=chunk, chunk_kv=chunk)
+    ref = reference_attention(q, k, v)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+@given(scale=st.floats(0.01, 100.0), seed=st.integers(0, 2**31 - 1))
+def test_attention_softmax_scale_invariance(scale, seed):
+    """Adding a per-row constant to scores (here via v-independent shift of
+    all logits by duplicating q) never changes softmax output: attention of
+    (q, k, v) equals attention of (q, k, v) computed at a different max —
+    regression proxy: outputs are bounded by max |v|."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = scale * jax.random.normal(ks[0], (1, 9, 2, 8))
+    k = jax.random.normal(ks[1], (1, 9, 2, 8))
+    v = jax.random.normal(ks[2], (1, 9, 2, 8))
+    out = chunked_attention(q, k, v, chunk_q=4, chunk_kv=4)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-4
+
+
+@given(seed=st.integers(0, 2**31 - 1), mag=st.floats(0.1, 50.0))
+def test_kv_quantization_error_bound(seed, mag):
+    x = mag * jax.random.normal(jax.random.PRNGKey(seed), (2, 4, 2, 16))
+    qv, sc = quantize_kv(x)
+    deq = qv.astype(jnp.float32) * sc.astype(jnp.float32)[..., None]
+    bound = sc.astype(jnp.float32)[..., None] * 0.5
+    assert bool(jnp.all(jnp.abs(deq - x) <= bound + 1e-4 * mag))
+
+
+@given(b=st.integers(1, 3), s=st.integers(1, 8), v=st.integers(2, 40),
+       seed=st.integers(0, 2**31 - 1))
+def test_cross_entropy_matches_naive(b, s, v, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    logits = jax.random.normal(ks[0], (b, s, v))
+    labels = jax.random.randint(ks[1], (b, s), 0, v)
+    ce = cross_entropy(logits, labels, v)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    naive = -jnp.mean(jnp.take_along_axis(logp, labels[..., None], -1))
+    assert abs(float(ce - naive)) < 1e-4
+
+
+@given(axis_len=st.integers(1, 20), mult=st.sampled_from([4, 8, 128]))
+def test_pad_unpad_roundtrip(axis_len, mult):
+    x = jnp.arange(2 * axis_len, dtype=jnp.float32).reshape(2, axis_len)
+    xp, orig = pad_axis(x, 1, mult)
+    assert xp.shape[1] % mult == 0
+    assert jnp.array_equal(unpad_axis(xp, 1, orig), x)

@@ -1,0 +1,113 @@
+"""Sharding-rule unit + property tests: specs never duplicate a mesh axis,
+drop non-divisible dims, and adapt to tiny-batch long-context shapes."""
+import dataclasses
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.config import (
+    MULTI_POD,
+    SINGLE_POD,
+    ModelConfig,
+    MoEConfig,
+    get_arch,
+    get_shape,
+    list_archs,
+)
+from repro.nn.param import Param, is_param, axes_tree
+from repro.models.registry import get_model
+from repro.sharding.auto import rules_for
+from repro.sharding.rules import DEFAULT_RULES, logical_to_spec
+from repro.train.optimizer import adamw_init_spec
+
+
+def _no_dup(spec: P):
+    seen = []
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            assert a not in seen, spec
+            seen.append(a)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("mesh", [SINGLE_POD, MULTI_POD])
+@pytest.mark.parametrize("shape_name", ["train_4k", "long_500k"])
+def test_param_and_cache_specs_valid(arch, mesh, shape_name):
+    """Every parameter/cache PartitionSpec is duplicate-free and divides the
+    tensor shape."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    rules, _ = rules_for(cfg, mesh, shape)
+    model = get_model(cfg)
+    sizes = dict(zip(mesh.axes, mesh.shape))
+
+    def check(spec_tree):
+        for path, p in jax.tree_util.tree_flatten_with_path(
+                spec_tree, is_leaf=is_param)[0]:
+            spec = logical_to_spec(p.axes, mesh.axes, rules)
+            _no_dup(spec)
+            for dim, entry in zip(p.shape, spec):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                n = 1
+                for a in axes:
+                    n *= sizes[a]
+                assert dim % n == 0, (path, p.shape, spec)
+
+    check(model.param_spec())
+    window = model.effective_window(shape)
+    check(model.cache_spec(shape.global_batch, shape.seq_len, window))
+    if shape.kind == "train":
+        fsdp = dict(rules.table).get("embed") is not None
+        check(adamw_init_spec(model.param_spec(), zero1=True,
+                              dp_size=mesh.dp_size, fsdp=fsdp))
+
+
+@given(heads=st.integers(1, 64), kv=st.integers(1, 64),
+       ff=st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_rules_drop_non_divisible(heads, kv, ff):
+    cfg = dataclasses.replace(
+        get_arch("internlm2-20b"), num_heads=heads,
+        num_kv_heads=kv, d_ff=ff * 128, head_dim=128)
+    rules, notes = rules_for(cfg, SINGLE_POD, None)
+    t = dict(rules.table)
+    assert (t["heads"] is None) == (heads % 16 != 0)
+    assert (t["kv_heads"] is None) == (kv % 16 != 0)
+    assert (t["ff"] is None) == ((ff * 128) % 16 != 0)
+
+
+def test_long_context_tiny_batch_moves_sharding_to_kv_seq():
+    cfg = get_arch("internlm2-20b")
+    rules, notes = rules_for(cfg, SINGLE_POD, get_shape("long_500k"))
+    t = dict(rules.table)
+    assert t["batch"] is None
+    assert t["kv_seq"] is not None
+
+
+def test_moe_shard_modes_mutually_exclusive():
+    for arch in ("grok-1-314b", "qwen3-moe-30b-a3b"):
+        cfg = get_arch(arch)
+        rules, _ = rules_for(cfg, SINGLE_POD, None)
+        t = dict(rules.table)
+        assert t["experts"] is None or t["expert_ff"] is None
+
+
+def test_fsdp_enabled_for_large_models_only():
+    for arch, expect in [("grok-1-314b", True), ("gemma2-2b", False),
+                         ("qwen1.5-32b", True), ("rwkv6-1.6b", False)]:
+        rules, notes = rules_for(get_arch(arch), SINGLE_POD, None)
+        assert (dict(rules.table)["embed"] is not None) == expect, arch
+
+
+def test_multi_pod_batch_spans_pod_axis():
+    rules, _ = rules_for(get_arch("internlm2-20b"), MULTI_POD,
+                         get_shape("train_4k"))
+    spec = logical_to_spec(("batch", "seq"), MULTI_POD.axes, rules)
+    assert spec[0] == ("pod", "data")

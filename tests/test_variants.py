@@ -1,0 +1,87 @@
+"""§Perf variant correctness: head padding must be semantics-preserving,
+int8 KV bounded, variant plumbing sound."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.config import SINGLE_POD, get_arch
+from repro.launch.variants import VARIANTS, apply_variants, head_pad
+from repro.models.registry import get_model
+from repro.sharding.auto import rules_for
+
+
+def test_head_pad_preserves_semantics():
+    """A model with heads padded to the axis multiple, whose padded q/k/v
+    columns and wo rows are zero, computes the same logits as the original."""
+    cfg = dataclasses.replace(get_arch("qwen1.5-32b").reduced(),
+                              dtype="float32", param_dtype="float32",
+                              num_heads=3, num_kv_heads=3)  # odd, like 40
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    cfg_p, _, note = head_pad(cfg, rules_for(cfg, SINGLE_POD, None)[0],
+                              model_size=4)
+    assert cfg_p.num_heads == 4 and "head_pad" in note
+    model_p = get_model(cfg_p)
+    params_p = model_p.init(jax.random.PRNGKey(1))
+
+    hd = cfg.head_dim
+    qd, qd_p = cfg.q_dim, cfg_p.q_dim
+
+    def pad_layer(p_small, p_big):
+        out = dict(p_big)
+        for name, d_out in (("wq", qd), ("wk", qd), ("wv", qd)):
+            w = jnp.zeros_like(p_big[name]["w"])
+            w = w.at[..., :d_out].set(p_small[name]["w"])
+            entry = {"w": w}
+            if "b" in p_small[name]:
+                b = jnp.zeros_like(p_big[name]["b"]).at[..., :d_out].set(
+                    p_small[name]["b"])
+                entry["b"] = b
+            out[name] = entry
+        wo = jnp.zeros_like(p_big["wo"]["w"])  # [L, q_dim_padded, d]
+        wo = wo.at[:, :qd, :].set(p_small["wo"]["w"])
+        out["wo"] = {"w": wo}
+        return out
+
+    def graft(ps, pb):
+        out = dict(pb)
+        out["embed"] = ps["embed"]
+        out["ln_f"] = ps["ln_f"]
+        out["layers"] = dict(pb["layers"])
+        for k in ("ln_attn", "ln_mlp", "mlp"):
+            out["layers"][k] = ps["layers"][k]
+        out["layers"]["attn"] = pad_layer(ps["layers"]["attn"],
+                                          pb["layers"]["attn"])
+        return out
+
+    params_grafted = graft(params, params_p)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                              cfg.vocab_size)
+    lg_small, _ = model.forward(params, {"tokens": toks}, mode="prefill")
+    lg_big, _ = model_p.forward(params_grafted, {"tokens": toks},
+                                mode="prefill")
+    err = float(jnp.max(jnp.abs(lg_small[..., : cfg.vocab_size]
+                                - lg_big[..., : cfg.vocab_size])))
+    assert err < 1e-4, err
+
+
+def test_variant_chain_application():
+    cfg = get_arch("qwen1.5-32b")
+    rules, _ = rules_for(cfg, SINGLE_POD, None)
+    cfg2, rules2, notes, mb = apply_variants(
+        ("head_pad", "int8kv", "mb4"), cfg, rules, 16)
+    assert cfg2.num_heads == 48 and cfg2.num_kv_heads == 48
+    assert cfg2.kv_quant
+    assert mb == 4
+    assert len(notes) == 3
+
+
+def test_all_variants_registered_and_callable():
+    cfg = get_arch("internlm2-20b")
+    rules, _ = rules_for(cfg, SINGLE_POD, None)
+    for name, fn in VARIANTS.items():
+        cfg2, rules2, note = fn(cfg, rules, 16)
+        assert isinstance(note, str) and note

@@ -1,0 +1,70 @@
+"""Diagnose per-device memory of one (arch, shape, mesh) dry-run combo:
+prints memory_analysis fields, the largest while-loop states, and the
+largest non-parameter tensors in the compiled HLO.
+
+Usage: PYTHONPATH=src python tools/meminspect.py <arch> <shape> [--multi-pod]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion "
+)
+
+import re
+import sys
+
+import jax
+
+from repro.core.config import get_arch, get_shape
+from repro.launch.dryrun import _build_step
+from repro.launch.mesh import make_production_mesh, mesh_config
+from repro.sharding.auto import rules_for
+from repro.launch.hlo_analysis import shape_bytes, _SHAPE_RE
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    multi = "--multi-pod" in sys.argv
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh_cfg = mesh_config(multi)
+    rules, notes = rules_for(cfg, mesh_cfg, shape)
+    print("sharding notes:", notes)
+    mesh = make_production_mesh(multi_pod=multi)
+    fn, args, donate = _build_step(cfg, shape, mesh_cfg, rules)(mesh)
+    with mesh:
+        compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+    mem = compiled.memory_analysis()
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes"):
+        print(f"{k:28s} {getattr(mem, k)/2**30:9.2f} GiB")
+    txt = compiled.as_text()
+    print("\n=== while states > 0.5 GiB ===")
+    for line in txt.splitlines():
+        ls = line.strip()
+        m = re.match(r'(?:ROOT )?%([\w.\-]+) = (\(.*?\)) while\(', ls)
+        if m and shape_bytes(m.group(2)) > 2**29:
+            trip = re.search(r'known_trip_count[^0-9]*(\d+)', ls)
+            print(f"{shape_bytes(m.group(2))/2**30:8.2f} GiB "
+                  f"{m.group(1)[:30]} trip={trip.group(1) if trip else '?'}")
+            for dt, dims in _SHAPE_RE.findall(m.group(2)):
+                bb = shape_bytes(f"{dt}[{dims}]")
+                if bb > 2**28:
+                    print(f"          {bb/2**30:7.2f} GiB {dt}[{dims}]")
+    print("\n=== largest instruction results (top 20, non-param) ===")
+    sizes = []
+    for line in txt.splitlines():
+        m = re.match(r'\s*(?:ROOT )?%([\w.\-]+) = ([^ ]+) ([a-z][a-z0-9\-]*)\(',
+                     line)
+        if m and m.group(3) not in ("parameter",):
+            b = shape_bytes(m.group(2))
+            if b > 2**28:
+                sizes.append((b, m.group(3), m.group(2)[:70], m.group(1)[:45]))
+    for b, op, t, n in sorted(sizes, reverse=True)[:20]:
+        print(f"{b/2**30:8.2f} GiB {op:22s} {t}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,10 +5,16 @@ ladder method on this host (XLA:CPU wall time — the *relative* ladder
 ordering is the reproduction target; absolute mobile-GPU numbers are not
 reproducible off-device) and derives per-method HLO bytes/FLOPs to model
 the TPU roofline effect of each layout/blocking choice.
+
+``run_tile_sweep`` additionally sweeps the spatial ``oh_block`` tile of the
+Pallas advanced-SIMD kernel over large-frame shapes (512×512 inputs the
+untiled seed kernel could not stage in VMEM), reporting one row per
+(shape, oh_block) with the resolved band geometry.
 """
 from __future__ import annotations
 
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -16,9 +22,23 @@ import jax.numpy as jnp
 from repro.core.engine import CNNEngine
 from repro.core.methods import Method, LADDER
 from repro.core.netdefs import NETWORKS
+from repro.kernels.conv2d.kernels import (
+    _band_rows,
+    _out_size,
+    resolve_oh_block,
+)
+from repro.kernels.conv2d.ops import SUBLANES, conv2d as conv2d_pallas
 from repro.launch.hlo_analysis import analyze_hlo_text
 
 BATCH = 16  # the paper's batch of 16 frames (§6.2)
+
+# (name, x-shape NCHW, oc, k, stride, pad) — large_512 is the frame class
+# whose padded activations (~34–67 MB) exceed the per-cell VMEM budget
+TILE_SWEEP_SHAPES = (
+    ("large_512", (1, 32, 512, 512), 16, 3, (1, 1), (1, 1)),
+    ("alexnet_conv2", (2, 96, 27, 27), 128, 5, (1, 1), (2, 2)),
+)
+OH_BLOCKS = (8, 32, None)  # None = auto heuristic from the VMEM budget
 
 
 def _time(fn, *args, iters=3):
@@ -28,6 +48,40 @@ def _time(fn, *args, iters=3):
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run_tile_sweep(shapes=TILE_SWEEP_SHAPES, oh_blocks=OH_BLOCKS):
+    """One row per (shape, oh_block): the spatially-tiled advanced-SIMD
+    kernel in interpret mode, with the resolved band geometry derived."""
+    rows = []
+    for name, xshape, oc, k, stride, pad in shapes:
+        n, c, h, wd = xshape
+        x = jax.random.normal(jax.random.PRNGKey(0), xshape, jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (oc, c, k, k)) * 0.1
+        b = jnp.zeros((oc,), jnp.float32)
+        oh = _out_size(h, k, stride[0], pad[0])
+        ow = _out_size(wd, k, stride[1], pad[1])
+        # the geometry the kernel itself resolves: padded channels, and
+        # an oc block clamped to the actual output-channel count
+        cp = c + (-c) % SUBLANES
+        ocb = min(128, oc)
+        for ohb in oh_blocks:
+            fn = partial(conv2d_pallas, stride=stride, padding=pad,
+                         relu=True, method="advanced_simd_128", oh_block=ohb,
+                         interpret=True)
+            us = _time(fn, x, w, b, iters=2)
+            resolved = resolve_oh_block(oh, ow, wd + 2 * pad[1], cp, k, k,
+                                        stride[0], ocb, ohb)
+            n_tiles = -(-oh // resolved)
+            band = _band_rows(resolved, k, stride[0])
+            label = "auto" if ohb is None else str(ohb)
+            rows.append({
+                "bench": f"conv_tile_sweep/{name}/oh_block_{label}",
+                "us_per_call": us,
+                "derived": (f"oh_block={resolved} n_tiles={n_tiles} "
+                            f"band_rows={band} oh={oh} ow={ow}"),
+            })
+    return rows
 
 
 def run(nets=("lenet5", "cifar10", "alexnet"), batch=BATCH):
@@ -55,4 +109,5 @@ def run(nets=("lenet5", "cifar10", "alexnet"), batch=BATCH):
                             f"flops={costs.flops:.3e} bytes={costs.bytes:.3e} "
                             f"ai={costs.flops/max(costs.bytes,1):.2f}"),
             })
+    rows.extend(run_tile_sweep())
     return rows

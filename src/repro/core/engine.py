@@ -60,12 +60,19 @@ class CNNEngine:
 
     def __init__(self, net: NetworkDef, method: Method = Method.ADVANCED_SIMD_8,
                  use_pallas: bool = False, fuse_relu: bool = True,
-                 per_layer_methods: Optional[Dict[str, Method]] = None):
+                 per_layer_methods: Optional[Dict[str, Method]] = None,
+                 oh_block: Optional[int] = None,
+                 per_layer_oh_blocks: Optional[Dict[str, int]] = None):
         self.net = net
         self.method = method
         self.use_pallas = use_pallas
         self.fuse_relu = fuse_relu
         self.per_layer_methods = per_layer_methods or {}
+        # spatial tile (output-row band) for the Pallas SIMD conv kernels;
+        # None = auto from the VMEM budget, overridable per layer like the
+        # execution method itself
+        self.oh_block = oh_block
+        self.per_layer_oh_blocks = per_layer_oh_blocks or {}
         self._shapes = self._infer_shapes()
 
     # -- parameters -----------------------------------------------------------
@@ -120,6 +127,9 @@ class CNNEngine:
     def _method_for(self, name: str) -> Method:
         return self.per_layer_methods.get(name, self.method)
 
+    def _oh_block_for(self, name: str) -> Optional[int]:
+        return self.per_layer_oh_blocks.get(name, self.oh_block)
+
     def forward(self, params, x, collect: Optional[dict] = None):
         """x: [N, C, H, W] (a batch of frames, paper §4).  ``collect``
         (optional dict) receives per-layer outputs for inspection."""
@@ -138,7 +148,7 @@ class CNNEngine:
                 p = params[spec.name]
                 x = conv2d(x, p["w"], p["b"], self._method_for(spec.name),
                            spec.stride, spec.padding, fused_relu,
-                           self.use_pallas)
+                           self.use_pallas, self._oh_block_for(spec.name))
             elif spec.kind == "pool":
                 x = _pool(x, spec)
                 if fused_relu and not spec.relu:
@@ -197,12 +207,14 @@ class CNNEngine:
             cur = acts[spec.name]
         return best.name, best_in
 
-    def conv_layer_fn(self, name: str, method: Method):
+    def conv_layer_fn(self, name: str, method: Method,
+                      oh_block: Optional[int] = None):
         spec = next(s for s in self.net.layers if s.name == name)
+        ohb = oh_block if oh_block is not None else self._oh_block_for(name)
 
         def fn(params, x):
             p = params[name]
             return conv2d(x, p["w"], p["b"], method, spec.stride,
-                          spec.padding, True, self.use_pallas)
+                          spec.padding, True, self.use_pallas, ohb)
 
         return fn

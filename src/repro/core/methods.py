@@ -129,14 +129,16 @@ def conv2d_basic_parallel(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
 
 
 def conv2d_basic_simd(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
-                      use_pallas=False):
+                      use_pallas=False, oh_block=None):
     """NHWC: the channel axis is the fastest-varying dimension and the
-    reduction is a vectorized dot over channels per kernel position."""
+    reduction is a vectorized dot over channels per kernel position.
+    ``oh_block`` (Pallas path) tiles the output height into row bands so a
+    grid cell stages only the band it needs; None = auto from VMEM."""
     if use_pallas:
         from repro.kernels.conv2d import ops as conv_ops
 
         return conv_ops.conv2d(x, w, b, stride, padding, relu,
-                               method="basic_simd")
+                               method="basic_simd", oh_block=oh_block)
     xh = nchw_to_nhwc(x)  # dimension swapping (§4.3)
     wh = oihw_to_hwio(w)  # [kh, kw, c, oc]
     n, h, wd, c = xh.shape
@@ -170,17 +172,19 @@ def conv2d_basic_simd(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
 
 
 def conv2d_advanced_simd(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
-                         block: int = 4, use_pallas=False):
+                         block: int = 4, use_pallas=False, oh_block=None):
     """Each "thread" (here: matmul tile) produces `block` output channels
     from one loaded patch — the paper's 4/8-outputs-per-thread reuse taken
     to the MXU: im2col patches × kernel matrix, bias+ReLU fused in the
     epilogue.  `block` is kept as the paper's parameter; on TPU the Pallas
-    kernel raises it to the 128-wide MXU tile."""
+    kernel raises it to the 128-wide MXU tile.  ``oh_block`` (Pallas path)
+    tiles the output height into row bands (None = auto from VMEM)."""
     if use_pallas:
         from repro.kernels.conv2d import ops as conv_ops
 
         return conv_ops.conv2d(x, w, b, stride, padding, relu,
-                               method=f"advanced_simd_{block}")
+                               method=f"advanced_simd_{block}",
+                               oh_block=oh_block)
     xh = nchw_to_nhwc(x)
     wh = oihw_to_hwio(w)
     n, h, wd, c = xh.shape
@@ -239,15 +243,18 @@ def fc_fused(x, w, b, relu=False, use_pallas=False):
 
 
 def conv2d(x, w, b, method: Method, stride=(1, 1), padding=(0, 0),
-           relu=False, use_pallas=False):
+           relu=False, use_pallas=False, oh_block=None):
     if method == Method.SEQ_REF:
         return conv2d_seq_ref(x, w, b, stride, padding, relu)
     if method == Method.BASIC_PARALLEL:
         return conv2d_basic_parallel(x, w, b, stride, padding, relu, use_pallas)
     if method == Method.BASIC_SIMD:
-        return conv2d_basic_simd(x, w, b, stride, padding, relu, use_pallas)
+        return conv2d_basic_simd(x, w, b, stride, padding, relu, use_pallas,
+                                 oh_block)
     if method == Method.ADVANCED_SIMD_4:
-        return conv2d_advanced_simd(x, w, b, stride, padding, relu, 4, use_pallas)
+        return conv2d_advanced_simd(x, w, b, stride, padding, relu, 4,
+                                    use_pallas, oh_block)
     if method == Method.ADVANCED_SIMD_8:
-        return conv2d_advanced_simd(x, w, b, stride, padding, relu, 8, use_pallas)
+        return conv2d_advanced_simd(x, w, b, stride, padding, relu, 8,
+                                    use_pallas, oh_block)
     raise ValueError(method)

@@ -9,18 +9,29 @@ batch; we launch one grid cell per frame × tile):
   NOT on the lane axis, mirroring the paper's un-swapped layout.  The MXU
   stays idle; only the VPU spatial lanes are used.
 * ``basic_simd``      (§4.3) — NHWC after dimension swapping: channels on
-  the 128-lane minor axis; per kernel position a [oh·ow, C] × [C, OC] dot
-  — the vectorized channel dot product.
+  the 128-lane minor axis; grid cell (frame, oh-tile); per kernel position
+  a [rows, C] × [C, OC] dot — the vectorized channel dot product — over
+  one output-row band at a time.
 * ``advanced_simd``   (§4.4) — NHWC + output-channel blocking: grid cell
   (frame, oh-tile, oc-tile); an im2col patch matrix [rows, KH·KW·C] built
-  once in VMEM is reused for the whole 128-wide oc tile (the paper's
-  4/8-outputs-per-thread reuse at MXU width), with bias+ReLU fused in the
-  epilogue.
+  once per spatial tile in VMEM is reused for the whole 128-wide oc tile
+  (the paper's 4/8-outputs-per-thread reuse at MXU width), with bias+ReLU
+  fused in the epilogue.
 
-VMEM budget: frames of the paper's CNNs (≤227×227×3, ≤27×27×256) fit in
-VMEM whole; block shapes keep the minor dimension lane-aligned when the
+Spatial tiling (the ``oh_block`` knob): both SIMD kernels split the output
+height into bands of ``oh_block`` rows.  Each grid cell loads only the
+input-row band its output band needs — ``(oh_block-1)*stride + KH`` rows
+including the halo, addressed stride-aware with an element-offset
+(``pl.Unblocked``) BlockSpec so neighbouring bands may overlap by the
+``KH - stride`` halo rows.  ``oh_block=None`` picks the largest band whose
+working set (input band + im2col patches + weights + output block) fits
+``VMEM_BUDGET_BYTES`` — so frames far larger than VMEM (e.g. 512×512×64)
+run on the same ladder instead of trying to stage the whole padded frame.
+
+VMEM budget: block shapes keep the minor dimension lane-aligned when the
 channel count allows (ops.py pads channels — the paper's divisible-by-4
-observation at lane width 128/8).
+observation at lane width 128/8); the heuristic targets half of the ~16 MB
+per-core VMEM to leave room for double buffering.
 """
 from __future__ import annotations
 
@@ -31,9 +42,56 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Target working set per grid cell — half the ~16 MB/core VMEM, leaving the
+# other half for the pipeline's double buffering.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
 
 def _out_size(size, k, stride, pad):
     return (size + 2 * pad - k) // stride + 1
+
+
+def _band_rows(oh_block, kh, sy):
+    """Input rows one output band needs: oh_block strided rows + halo."""
+    return (oh_block - 1) * sy + kh
+
+
+def auto_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block,
+                  budget: int = VMEM_BUDGET_BYTES, itemsize: int = 4,
+                  im2col: bool = True) -> int:
+    """Largest output-row band whose per-cell working set fits ``budget``.
+
+    Working set (fp32 staging): the input row band, the patch staging, one
+    weight block, and the output block.  ``im2col=True`` (advanced kernel)
+    charges the full [rows, KH*KW*C] patch matrix; ``im2col=False`` (basic
+    kernel) charges only the single [rows, C] slice it holds at a time.
+    Candidates walk down from the whole frame through powers of two; the
+    floor is a single output row.
+    """
+    patch_c = kh * kw * c if im2col else c
+    candidates = [oh] + [b for b in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1)
+                         if b < oh]
+    for ohb in candidates:
+        band = _band_rows(ohb, kh, sy)
+        need = (band * wp * c          # input row band (incl. halo)
+                + ohb * ow * patch_c       # patch staging
+                + kh * kw * c * oc_block   # weight block
+                + ohb * ow * oc_block      # output block / accumulator
+                ) * itemsize
+        if need <= budget:
+            return ohb
+    return 1
+
+
+def resolve_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block, oh_block,
+                     im2col: bool = True) -> int:
+    """The output-row band a SIMD kernel will actually run with: the auto
+    heuristic when ``oh_block`` is None, else the clamped explicit value.
+    Public so benches/tools can report the executed geometry."""
+    if oh_block is None:
+        return auto_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block,
+                             im2col=im2col)
+    return max(1, min(oh_block, oh))
 
 
 # ---------------------------------------------------------------------------
@@ -91,20 +149,48 @@ def conv2d_basic_parallel(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
 
 
 # ---------------------------------------------------------------------------
+# shared oh-band plumbing for the SIMD kernels
+# ---------------------------------------------------------------------------
+
+
+def _plan_oh_tiles(xp, oh, kh, kw, sy, oh_block, ow, oc_block,
+                   im2col=True):
+    """Resolve the band size and pad the input so every band is full.
+
+    Returns ``(xp, ohb, n_tiles, band)`` where ``xp`` has enough bottom
+    zero-rows that the last band — starting at ``(n_tiles-1)*ohb*sy`` and
+    spanning ``band`` rows — stays in bounds; the surplus output rows are
+    sliced off by the caller.
+    """
+    n, hp, wp, c = xp.shape
+    ohb = resolve_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block, oh_block,
+                           im2col=im2col)
+    n_tiles = -(-oh // ohb)
+    ohp = n_tiles * ohb
+    band = _band_rows(ohb, kh, sy)
+    hp_need = (ohp - 1) * sy + kh
+    if hp_need > hp:
+        xp = jnp.pad(xp, ((0, 0), (0, hp_need - hp), (0, 0), (0, 0)))
+    return xp, ohb, n_tiles, band
+
+
+# ---------------------------------------------------------------------------
 # §4.3 basic SIMD — NHWC, vectorized channel dot per kernel position
 # ---------------------------------------------------------------------------
 
 
 def _basic_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx, relu):
-    # x_ref: [HP, WP, C]; w_ref: [KH, KW, C, OC]; o_ref: [OH, OW, OC]
+    # x_ref: [1, BAND, WP, C] (input-row band); w_ref: [KH, KW, C, OC];
+    # o_ref: [OH_BLK, OW, OC]
     ohh, oww, oc = o_ref.shape
+    x = x_ref[0]
     acc = jnp.zeros((ohh * oww, oc), jnp.float32)
     for i in range(kh):
         for j in range(kw):
             patch = jax.lax.slice(
-                x_ref[...], (i, j, 0),
+                x, (i, j, 0),
                 (i + (ohh - 1) * sy + 1, j + (oww - 1) * sx + 1,
-                 x_ref.shape[2]),
+                 x.shape[2]),
                 (sy, sx, 1),
             ).reshape(ohh * oww, -1)  # [rows, C] — C on the lane axis
             acc = acc + jnp.dot(
@@ -119,28 +205,40 @@ def _basic_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx, relu):
 
 
 def conv2d_basic_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
-                      relu=False, interpret: bool = False):
+                      relu=False, oh_block=None, interpret: bool = False):
     n, h, wd, c = x_nhwc.shape
     kh, kw, _, oc = w_hwio.shape
     sy, sx = stride
     py, px = padding
     xp = jnp.pad(x_nhwc, ((0, 0), (py, py), (px, px), (0, 0)))
     oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
-    hp, wp = xp.shape[1], xp.shape[2]
+    xp, ohb, n_tiles, band = _plan_oh_tiles(xp, oh, kh, kw, sy, oh_block,
+                                            ow, oc, im2col=False)
+    wp = xp.shape[2]
+    row_step = ohb * sy
     kern = functools.partial(_basic_simd_kernel, kh=kh, kw=kw, sy=sy, sx=sx,
                              relu=relu)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
-        grid=(n,),
+        grid=(n, n_tiles),
         in_specs=[
-            pl.BlockSpec((None, hp, wp, c), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((kh, kw, c, oc), lambda i: (0, 0, 0, 0)),
-            pl.BlockSpec((oc,), lambda i: (0,)),
+            # element-offset indexing: bands overlap by the KH-sy halo rows
+            pl.BlockSpec((1, band, wp, c),
+                         lambda i, t: (i, t * row_step, 0, 0),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((kh, kw, c, oc), lambda i, t: (0, 0, 0, 0)),
+            pl.BlockSpec((oc,), lambda i, t: (0,)),
         ],
-        out_specs=pl.BlockSpec((None, oh, ow, oc), lambda i: (i, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, oh, ow, oc), x_nhwc.dtype),
+        out_specs=pl.BlockSpec((None, ohb, ow, oc),
+                               lambda i, t: (i, t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n_tiles * ohb, ow, oc),
+                                       x_nhwc.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
         interpret=interpret,
     )(xp, w_hwio, b)
+    return out[:, :oh]
 
 
 # ---------------------------------------------------------------------------
@@ -150,15 +248,17 @@ def conv2d_basic_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
 
 def _advanced_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
                           relu):
-    # x_ref: [HP, WP, C] (frame); w_ref: [KH*KW*C, OC_BLK]; o_ref: [OH, OW, OC_BLK]
+    # x_ref: [1, BAND, WP, C] (input-row band); w_ref: [KH*KW*C, OC_BLK];
+    # o_ref: [OH_BLK, OW, OC_BLK]
     ohh, oww, ocb = o_ref.shape
+    x = x_ref[0]
     cols = []
-    for i in range(kh):  # im2col built once per frame tile, reused for the
-        for j in range(kw):  # whole 128-wide output-channel block (§4.4)
+    for i in range(kh):  # im2col built once per spatial tile, reused for
+        for j in range(kw):  # the whole 128-wide output-channel block (§4.4)
             cols.append(jax.lax.slice(
-                x_ref[...], (i, j, 0),
+                x, (i, j, 0),
                 (i + (ohh - 1) * sy + 1, j + (oww - 1) * sx + 1,
-                 x_ref.shape[2]),
+                 x.shape[2]),
                 (sy, sx, 1),
             ).reshape(ohh * oww, -1))
     patches = jnp.concatenate(cols, axis=-1)  # [rows, KH*KW*C]
@@ -171,7 +271,7 @@ def _advanced_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
 
 
 def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
-                         relu=False, oc_block: int = 128,
+                         relu=False, oc_block: int = 128, oh_block=None,
                          interpret: bool = False):
     n, h, wd, c = x_nhwc.shape
     kh, kw, _, oc = w_hwio.shape
@@ -179,7 +279,6 @@ def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
     py, px = padding
     xp = jnp.pad(x_nhwc, ((0, 0), (py, py), (px, px), (0, 0)))
     oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
-    hp, wp = xp.shape[1], xp.shape[2]
     ocb = min(oc_block, oc)
     pad_oc = (-oc) % ocb
     wmat = w_hwio.reshape(kh * kw * c, oc)
@@ -187,21 +286,30 @@ def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
         wmat = jnp.pad(wmat, ((0, 0), (0, pad_oc)))
         b = jnp.pad(b, (0, pad_oc))
     ocp = oc + pad_oc
+    xp, ohb, n_tiles, band = _plan_oh_tiles(xp, oh, kh, kw, sy, oh_block,
+                                            ow, ocb)
+    wp = xp.shape[2]
+    row_step = ohb * sy
     kern = functools.partial(_advanced_simd_kernel, kh=kh, kw=kw, sy=sy,
                              sx=sx, relu=relu)
     out = pl.pallas_call(
         kern,
-        grid=(n, ocp // ocb),
+        grid=(n, n_tiles, ocp // ocb),
         in_specs=[
-            pl.BlockSpec((None, hp, wp, c), lambda i, o: (i, 0, 0, 0)),
-            pl.BlockSpec((kh * kw * c, ocb), lambda i, o: (0, o)),
-            pl.BlockSpec((ocb,), lambda i, o: (o,)),
+            # element-offset indexing: bands overlap by the KH-sy halo rows
+            pl.BlockSpec((1, band, wp, c),
+                         lambda i, t, o: (i, t * row_step, 0, 0),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((kh * kw * c, ocb), lambda i, t, o: (0, o)),
+            pl.BlockSpec((ocb,), lambda i, t, o: (o,)),
         ],
-        out_specs=pl.BlockSpec((None, oh, ow, ocb), lambda i, o: (i, 0, 0, o)),
-        out_shape=jax.ShapeDtypeStruct((n, oh, ow, ocp), x_nhwc.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel")
+        out_specs=pl.BlockSpec((None, ohb, ow, ocb),
+                               lambda i, t, o: (i, t, 0, o)),
+        out_shape=jax.ShapeDtypeStruct((n, n_tiles * ohb, ow, ocp),
+                                       x_nhwc.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")
         ),
         interpret=interpret,
     )(xp, wmat, b)
-    return out[..., :oc]
+    return out[:, :oh, :, :oc]

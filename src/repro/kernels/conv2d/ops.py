@@ -3,6 +3,13 @@
 Accepts NCHW/OIHW (the deploy format), performs the dimension swap +
 channel padding host-side (the Fig. 5 "CPU idle time" work), dispatches to
 the method's Pallas kernel, and swaps back.
+
+``oh_block`` (SIMD methods only) sets the spatial tile: the output height
+is processed in bands of ``oh_block`` rows so each grid cell stages only
+the input-row band it needs (halo included) instead of the whole padded
+frame.  ``None`` lets ``kernels.auto_oh_block`` pick the largest band that
+fits the VMEM budget — required for frames (e.g. 512×512) whose padded
+activations exceed VMEM.
 """
 from __future__ import annotations
 
@@ -28,9 +35,10 @@ def _on_tpu() -> bool:
 
 
 @partial(jax.jit, static_argnames=("stride", "padding", "relu", "method",
-                                   "interpret"))
+                                   "oh_block", "interpret"))
 def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
-           method: str = "advanced_simd_128", interpret: bool = None):
+           method: str = "advanced_simd_128", oh_block: int = None,
+           interpret: bool = None):
     """x: [N, C, H, W]; w: [OC, C, KH, KW]; b: [OC]."""
     interp = (not _on_tpu()) if interpret is None else interpret
     if method == "basic_parallel":
@@ -43,11 +51,12 @@ def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
     wh, _ = pad_axis(wh, 2, SUBLANES)
     if method == "basic_simd":
         out = K.conv2d_basic_simd(xh, wh, b, stride, padding, relu,
-                                  interpret=interp)
+                                  oh_block=oh_block, interpret=interp)
     elif method.startswith("advanced_simd"):
         blk = int(method.rsplit("_", 1)[1]) if method[-1].isdigit() else 128
         out = K.conv2d_advanced_simd(xh, wh, b, stride, padding, relu,
-                                     oc_block=blk, interpret=interp)
+                                     oc_block=blk, oh_block=oh_block,
+                                     interpret=interp)
     else:
         raise ValueError(method)
     return nhwc_to_nchw(out)

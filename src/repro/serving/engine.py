@@ -115,7 +115,12 @@ class ServingEngine:
                     return c.at[tuple(idx)].set(c1.astype(c.dtype))
             return c
         self.cache = jax.tree_util.tree_map(insert, self.cache, cache1)
-        first = int(jnp.argmax(logits[0, -1]))
+        if req.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            first = int(sample(logits[:, -1], sub,
+                               temperature=req.temperature)[0])
+        else:
+            first = int(jnp.argmax(logits[0, -1]))
         slot = self.slots[i]
         slot.request = req
         slot.pos = prompt.shape[1]  # position of the next (generated) token
@@ -135,13 +140,19 @@ class ServingEngine:
         logits, self.cache = self._decode(
             self.params, jnp.asarray(tokens), jnp.asarray(positions),
             self.cache)
-        self.key, sub = jax.random.split(self.key)
-        temps = {i: self.slots[i].request.temperature for i in active}
-        greedy = sample(logits[:, 0], sub, temperature=0.0)
-        sampled = sample(logits[:, 0], sub, temperature=1.0)
+        # one fresh key per slot per step: slot i at step t never shares a
+        # key with slot j≠i or with its own other steps
+        self.key, step_key = jax.random.split(self.key)
+        keys = jax.random.split(step_key, self.max_batch)
+        greedy = np.asarray(jnp.argmax(logits[:, 0], axis=-1))  # one dispatch
         for i in active:
             s = self.slots[i]
-            tok = int(sampled[i]) if temps[i] > 0 else int(greedy[i])
+            temp = s.request.temperature
+            if temp > 0:
+                tok = int(sample(logits[i:i + 1, 0], keys[i],
+                                 temperature=temp)[0])
+            else:
+                tok = int(greedy[i])
             s.generated.append(tok)
             s.pos += 1
             req = s.request

@@ -33,7 +33,10 @@ def test_scan_flops_trip_corrected():
     costs = analyze_hlo_text(c.as_text())
     expect = 2 * n * n * n * T
     assert 0.9 * expect < costs.flops < 1.2 * expect
-    xla = c.cost_analysis()["flops"]
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax returns one dict per device
+        ca = ca[0]
+    xla = ca["flops"]
     assert xla < 0.2 * costs.flops  # body-once undercount, documented
 
 

@@ -1,0 +1,76 @@
+"""Serving-engine sampling semantics: per-request temperature and
+per-slot/per-step PRNG key usage."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.config import get_arch
+from repro.models.registry import get_model
+from repro.serving import engine as serving_engine
+from repro.serving.engine import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_arch("gemma2-2b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _run(model, params, reqs, seed=0):
+    eng = ServingEngine(model, params, max_batch=2, max_len=64, seed=seed)
+    for r in reqs:
+        eng.submit(dataclasses.replace(r))
+    return eng.run_until_drained()
+
+
+def test_temperature_zero_is_deterministic(model_and_params):
+    """Greedy requests must not depend on the engine's PRNG seed."""
+    model, params = model_and_params
+    reqs = [Request(0, [3, 1, 4], max_new_tokens=5, temperature=0.0)]
+    a = _run(model, params, reqs, seed=0)
+    b = _run(model, params, reqs, seed=123)
+    assert a == b
+
+
+def test_temperature_used_and_keys_distinct(model_and_params, monkeypatch):
+    """Sampling must use each request's own temperature, and every sampled
+    step must consume a fresh key (no key shared across slots or steps)."""
+    model, params = model_and_params
+    calls = []
+    real_sample = serving_engine.sample
+
+    def spy(logits, key, temperature=0.0, top_k=0):
+        calls.append((tuple(np.asarray(key).ravel().tolist()), temperature))
+        return real_sample(logits, key, temperature=temperature, top_k=top_k)
+
+    monkeypatch.setattr(serving_engine, "sample", spy)
+    reqs = [
+        Request(0, [3, 1, 4], max_new_tokens=4, temperature=0.7),
+        Request(1, [2, 7, 1], max_new_tokens=4, temperature=1.3),
+    ]
+    done = _run(model, params, reqs)
+    assert sorted(done) == [0, 1]
+    # each request's actual temperature reached the sampler
+    temps_seen = {t for _, t in calls}
+    assert temps_seen == {0.7, 1.3}
+    # every sampling call consumed a distinct key
+    keys_seen = [k for k, _ in calls]
+    assert len(keys_seen) == len(set(keys_seen))
+    # both requests sampled every generated token (prefill + 3 decode steps)
+    assert len(calls) == 8
+
+
+def test_greedy_request_never_samples(model_and_params, monkeypatch):
+    model, params = model_and_params
+
+    def boom(*a, **kw):  # pragma: no cover - failure path
+        raise AssertionError("greedy request must not hit the sampler")
+
+    monkeypatch.setattr(serving_engine, "sample", boom)
+    done = _run(model, params,
+                [Request(0, [1, 2, 3], max_new_tokens=4, temperature=0.0)])
+    assert len(done[0]) == 4

@@ -4,6 +4,8 @@ import dataclasses
 
 import jax
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

@@ -1,5 +1,13 @@
 """Paper Table 3 analogue: whole-network runtime × execution-method ladder
-(+ FPS derived column, §6.3 realtime check)."""
+(+ FPS derived column, §6.3 realtime check).
+
+Each method row now also reports the fused super-layer forward (the
+fusion planner's conv[+relu][+pool] groups) against the unfused jitted
+ladder — the ratio the fusion subsystem is accountable for.  ``run_json``
+emits the same sweep machine-readable (``BENCH_network.json`` via
+``benchmarks/run.py --json``) so the perf trajectory is recorded across
+PRs.
+"""
 from __future__ import annotations
 
 import time
@@ -8,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import CNNEngine
+from repro.core.fusion import fusion_summary
 from repro.core.methods import Method, LADDER
 from repro.core.netdefs import NETWORKS
 
@@ -15,11 +24,15 @@ BATCH = 16
 
 
 def _time(fn, *args, iters=3):
+    """Median wall time per call in us (first call outside the clock)."""
     jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
 
 
 def run(nets=("lenet5", "cifar10"), batch=BATCH):
@@ -45,12 +58,59 @@ def run(nets=("lenet5", "cifar10"), batch=BATCH):
         })
         for method in LADDER:
             eng = CNNEngine(net, method=method)
-            fn = eng.jit_forward()
-            us = _time(fn, params, x)
+            us = _time(eng.jit_forward(fuse=False), params, x)
             fps = batch / (us / 1e6)
             rows.append({
                 "bench": f"network_ladder/{name}/{method.value}",
                 "us_per_call": us,
                 "derived": f"speedup={base_us/us:.2f}x fps={fps:.1f}",
             })
+            if not fusion_summary(eng.plan(True)):
+                continue  # no fusable groups for this method (fallback)
+            us_f = _time(eng.jit_forward(fuse=True), params, x)
+            fps_f = batch / (us_f / 1e6)
+            rows.append({
+                "bench": f"network_ladder/{name}/{method.value}/fused",
+                "us_per_call": us_f,
+                "derived": (f"speedup={base_us/us_f:.2f}x fps={fps_f:.1f} "
+                            f"fused_vs_unfused={us/us_f:.2f}x"),
+            })
     return rows
+
+
+def run_json(nets=("lenet5", "cifar10"), batch=BATCH, iters=3,
+             methods=LADDER):
+    """Machine-readable fused-vs-unfused sweep for BENCH_network.json."""
+    out = {"bench": "network_ladder", "batch": batch, "iters": iters,
+           "backend": jax.default_backend(), "networks": {},
+           "note": ("advanced_simd_* fused ratios on the XLA backend fold "
+                    "in the super-layer's full-width oc matmul (vs the "
+                    "per-layer 4/8-wide blocks); basic_simd fused ratios "
+                    "share identical conv math with unfused and isolate "
+                    "the fusion win itself")}
+    for name in nets:
+        net = NETWORKS[name]()
+        eng0 = CNNEngine(net, method=Method.SEQ_REF)
+        params = eng0.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (batch, *net.input_shape), jnp.float32)
+        rows = []
+        for method in methods:
+            eng = CNNEngine(net, method=method)
+            us = _time(eng.jit_forward(fuse=False), params, x, iters=iters)
+            row = {
+                "method": method.value,
+                "unfused": {"us_per_call": us, "fps": batch / (us / 1e6)},
+            }
+            groups = fusion_summary(eng.plan(True))
+            if groups:
+                us_f = _time(eng.jit_forward(fuse=True), params, x,
+                             iters=iters)
+                row["fused"] = {"us_per_call": us_f,
+                                "fps": batch / (us_f / 1e6)}
+                row["fused_speedup"] = us / us_f
+                row["fused_groups"] = ["+".join(g) for g in groups]
+            rows.append(row)
+        out["networks"][name] = {"rows": rows,
+                                 "input_shape": list(net.input_shape)}
+    return out

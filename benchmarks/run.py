@@ -2,21 +2,28 @@
 
 Prints ``name,us_per_call,derived`` CSV (assignment contract):
   * bench_conv_ladder    — paper Table 4 (heaviest conv layer × method)
-  * bench_network_ladder — paper Table 3 (whole network × method, + FPS)
+  * bench_network_ladder — paper Table 3 (whole network × method, + FPS,
+                           + fused super-layer vs unfused ladder rows)
   * bench_fc_fused       — paper §4 FC fusion (bias+act epilogue)
   * bench_serving        — deployment scenario throughput
   * roofline             — §Roofline terms from the dry-run artifacts
                            (rows appear when results/dryrun/ is populated)
+
+``--json`` switches to the machine-readable path: only the network ladder
+runs, and its per-network, per-method fused-vs-unfused numbers
+(us_per_call, FPS, fused_speedup) are written to ``BENCH_network.json``
+so the perf trajectory is recorded across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
 
-def main() -> None:
+def _run_csv() -> None:
     print("name,us_per_call,derived")
-    suites = []
     from benchmarks import (  # noqa: E402
         bench_conv_ladder,
         bench_network_ladder,
@@ -55,6 +62,41 @@ def main() -> None:
                   f" fits={r['fits_16gb']}\"", flush=True)
     except Exception as e:  # noqa: BLE001
         print(f"roofline,SKIPPED,\"{e}\"", flush=True)
+
+
+def _run_json(nets, out_path: str, batch: int, iters: int) -> None:
+    from benchmarks import bench_network_ladder
+
+    data = bench_network_ladder.run_json(nets=nets, batch=batch, iters=iters)
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    for name, nd in data["networks"].items():
+        for row in nd["rows"]:
+            ratio = row.get("fused_speedup")
+            print(f"  {name}/{row['method']}: "
+                  f"unfused={row['unfused']['us_per_call']:.0f}us"
+                  + (f" fused={row['fused']['us_per_call']:.0f}us"
+                     f" fused_vs_unfused={ratio:.2f}x" if ratio else ""),
+                  flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_network.json instead of the CSV sweep")
+    ap.add_argument("--nets", default="lenet5,cifar10",
+                    help="comma-separated network names (json path)")
+    ap.add_argument("--out", default="BENCH_network.json",
+                    help="output path for --json")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.json:
+        _run_json(tuple(n.strip() for n in args.nets.split(",") if n.strip()),
+                  args.out, args.batch, args.iters)
+    else:
+        _run_csv()
 
 
 if __name__ == "__main__":

@@ -6,10 +6,16 @@ The engine owns:
 * the forward executor with the execution-method ladder for conv/FC layers,
 * fused-activation scheduling (ReLU folded into the producing layer —
   the TPU-native realization of the paper's Fig. 5 CPU/GPU overlap),
-* per-layer instrumentation used by the benchmark harness.
+* super-layer fusion: ``repro.core.fusion.plan_fusion`` groups
+  conv[+relu][+pool] runs into single dispatches (``fuse_pool``, on by
+  default, with per-layer opt-outs via ``per_layer_fuse``) so the
+  intermediate conv activation never round-trips through HBM,
+* per-layer instrumentation used by the benchmark harness (``collect``
+  forces the un-fused per-layer path so every activation is observable).
 
-Pooling and LRN run as plain XLA ops ("accelerated on mobile CPU via
-multi-threading" in the paper; on our stack XLA:CPU/TPU handles them).
+Pooling runs through the Pallas ``pool2d`` kernels when ``use_pallas`` is
+set, else as an XLA ``reduce_window``; LRN is a single channel-axis
+``reduce_window`` (fp32 accumulation).
 """
 from __future__ import annotations
 
@@ -22,35 +28,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.methods import Method, conv2d, fc_fused, fc_seq_ref
+from repro.core.fusion import FusedLayerSpec, plan_fusion
+from repro.core.methods import (
+    Method,
+    conv2d,
+    conv2d_pool_fused,
+    fc_fused,
+    fc_seq_ref,
+)
 from repro.core.netdefs import LayerSpec, NetworkDef
 
 
-def _pool(x, spec: LayerSpec):
-    kh, kw = spec.kernel
-    sy, sx = spec.stride
-    if spec.pool_kind == "max":
-        out = jax.lax.reduce_window(
-            x, -jnp.inf, jax.lax.max, (1, 1, kh, kw), (1, 1, sy, sx), "VALID"
-        )
-    else:
-        out = jax.lax.reduce_window(
-            x, 0.0, jax.lax.add, (1, 1, kh, kw), (1, 1, sy, sx), "VALID"
-        ) / float(kh * kw)
-    if spec.relu:
-        out = jnp.maximum(out, 0.0)
-    return out
+def _pool(x, spec: LayerSpec, use_pallas: bool = False, relu: bool = False):
+    """VALID pooling; ``relu`` is the folded standalone activation (applied
+    on top of the spec's own)."""
+    do_relu = spec.relu or relu
+    if use_pallas:
+        from repro.kernels.pool2d import ops as pool_ops
+
+        return pool_ops.pool2d(x, spec.kernel, spec.stride, spec.pool_kind,
+                               relu=do_relu)
+    from repro.kernels.pool2d.ref import pool2d_ref
+
+    return pool2d_ref(x, spec.kernel, spec.stride, spec.pool_kind,
+                      relu=do_relu)
 
 
 def _lrn(x, spec: LayerSpec):
-    """Local response normalization across channels (AlexNet-style)."""
+    """Local response normalization across channels (AlexNet-style): one
+    channel-axis ``reduce_window`` (fp32) instead of ``lrn_n`` slice+adds."""
     sq = x.astype(jnp.float32) ** 2
     n = spec.lrn_n
-    pad = n // 2
-    sq_p = jnp.pad(sq, ((0, 0), (pad, pad), (0, 0), (0, 0)))
-    acc = jnp.zeros_like(sq)
-    for i in range(n):
-        acc = acc + jax.lax.slice_in_dim(sq_p, i, i + x.shape[1], axis=1)
+    # window [c - n//2, c + (n-1)//2]: asymmetric padding keeps the output
+    # at C channels for even n too (symmetric pad would yield C+1)
+    acc = jax.lax.reduce_window(
+        sq, 0.0, jax.lax.add, (1, n, 1, 1), (1, 1, 1, 1),
+        ((0, 0), (n // 2, n - 1 - n // 2), (0, 0), (0, 0)),
+    )
     denom = (spec.lrn_k + spec.lrn_alpha * acc) ** spec.lrn_beta
     return (x.astype(jnp.float32) / denom).astype(x.dtype)
 
@@ -62,7 +76,9 @@ class CNNEngine:
                  use_pallas: bool = False, fuse_relu: bool = True,
                  per_layer_methods: Optional[Dict[str, Method]] = None,
                  oh_block: Optional[int] = None,
-                 per_layer_oh_blocks: Optional[Dict[str, int]] = None):
+                 per_layer_oh_blocks: Optional[Dict[str, int]] = None,
+                 fuse_pool: bool = True,
+                 per_layer_fuse: Optional[Dict[str, bool]] = None):
         self.net = net
         self.method = method
         self.use_pallas = use_pallas
@@ -73,7 +89,23 @@ class CNNEngine:
         # execution method itself
         self.oh_block = oh_block
         self.per_layer_oh_blocks = per_layer_oh_blocks or {}
+        # super-layer fusion (conv[+relu][+pool] groups); per_layer_fuse
+        # maps a conv/pool layer name -> False to opt it out of fusion,
+        # mirroring per_layer_methods
+        self.fuse_pool = fuse_pool
+        self.per_layer_fuse = per_layer_fuse or {}
         self._shapes = self._infer_shapes()
+        # plan + jit caches (keyed by fuse setting).  Engine config is
+        # treated as fixed once forward has run — call clear_caches()
+        # after mutating method/fuse/oh_block attributes in place.
+        self._plans: Dict[bool, list] = {}
+        self._jit_cache: Dict[bool, "jax.stages.Wrapped"] = {}
+
+    def clear_caches(self) -> None:
+        """Drop the memoized fusion plans and jitted forwards (call after
+        mutating engine configuration in place)."""
+        self._plans.clear()
+        self._jit_cache.clear()
 
     # -- parameters -----------------------------------------------------------
     def _infer_shapes(self) -> Dict[str, Tuple]:
@@ -130,18 +162,49 @@ class CNNEngine:
     def _oh_block_for(self, name: str) -> Optional[int]:
         return self.per_layer_oh_blocks.get(name, self.oh_block)
 
-    def forward(self, params, x, collect: Optional[dict] = None):
+    def plan(self, fuse: Optional[bool] = None) -> list:
+        """The execution plan: the layer list with conv[+relu][+pool] runs
+        replaced by ``FusedLayerSpec`` groups when fusion is on."""
+        use_fuse = self.fuse_pool if fuse is None else bool(fuse)
+        if use_fuse not in self._plans:
+            if use_fuse:
+                no = frozenset(n for n, v in self.per_layer_fuse.items()
+                               if not v)
+                self._plans[True] = plan_fusion(
+                    self.net, method_for=self._method_for, no_fuse=no,
+                    fuse_relu=self.fuse_relu)
+            else:
+                self._plans[False] = list(self.net.layers)
+        return self._plans[use_fuse]
+
+    def forward(self, params, x, collect: Optional[dict] = None,
+                fuse: Optional[bool] = None):
         """x: [N, C, H, W] (a batch of frames, paper §4).  ``collect``
-        (optional dict) receives per-layer outputs for inspection."""
-        layers = list(self.net.layers)
+        (optional dict) receives per-layer outputs for inspection — it
+        forces the un-fused per-layer path so every activation exists.
+        ``fuse`` overrides the engine-level ``fuse_pool`` for this call."""
+        if collect is not None:
+            fuse = False  # instrumentation needs every per-layer output
+        items = self.plan(fuse)
         i = 0
-        while i < len(layers):
-            spec = layers[i]
+        while i < len(items):
+            spec = items[i]
+            if isinstance(spec, FusedLayerSpec):
+                # super-layer: one dispatch, conv activation never lands
+                p = params[spec.conv.name]
+                x = conv2d_pool_fused(
+                    x, p["w"], p["b"], self._method_for(spec.conv.name),
+                    spec.conv.stride, spec.conv.padding, spec.relu,
+                    spec.pool.kernel, spec.pool.stride, spec.pool.pool_kind,
+                    spec.pool_relu, self.use_pallas,
+                    self._oh_block_for(spec.conv.name))
+                i += 1
+                continue
             # fused-activation scheduling: a standalone relu following a
             # conv/fc/pool is folded into that layer's epilogue
             fused_relu = spec.relu
-            if (self.fuse_relu and i + 1 < len(layers)
-                    and layers[i + 1].kind == "relu"
+            if (self.fuse_relu and i + 1 < len(items)
+                    and items[i + 1].kind == "relu"
                     and spec.kind in ("conv", "fc", "pool")):
                 fused_relu = True
             if spec.kind == "conv":
@@ -150,9 +213,7 @@ class CNNEngine:
                            spec.stride, spec.padding, fused_relu,
                            self.use_pallas, self._oh_block_for(spec.name))
             elif spec.kind == "pool":
-                x = _pool(x, spec)
-                if fused_relu and not spec.relu:
-                    x = jnp.maximum(x, 0.0)
+                x = _pool(x, spec, self.use_pallas, relu=fused_relu)
             elif spec.kind == "lrn":
                 x = _lrn(x, spec)
             elif spec.kind == "flatten":
@@ -166,7 +227,7 @@ class CNNEngine:
                                  self.use_pallas)
             elif spec.kind == "relu":
                 if not (self.fuse_relu and i > 0
-                        and layers[i - 1].kind in ("conv", "fc", "pool")):
+                        and items[i - 1].kind in ("conv", "fc", "pool")):
                     x = jnp.maximum(x, 0.0)
             elif spec.kind == "softmax":
                 x = jax.nn.softmax(x.astype(jnp.float32), axis=-1)
@@ -177,13 +238,20 @@ class CNNEngine:
             i += 1
         return x
 
-    def jit_forward(self):
-        return jax.jit(self.forward)
+    def jit_forward(self, fuse: Optional[bool] = None):
+        """The jitted forward, memoized per fuse setting — repeated calls
+        (``time_forward``, every bench iteration) reuse one compilation."""
+        key = self.fuse_pool if fuse is None else bool(fuse)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(
+                partial(self.forward, fuse=key))
+        return self._jit_cache[key]
 
     # -- instrumentation ----------------------------------------------------------
-    def time_forward(self, params, x, iters: int = 3) -> float:
-        fn = self.jit_forward()
-        fn(params, x).block_until_ready()  # compile + warm
+    def time_forward(self, params, x, iters: int = 3,
+                     fuse: Optional[bool] = None) -> float:
+        fn = self.jit_forward(fuse)
+        fn(params, x).block_until_ready()  # compile + warm (cached)
         t0 = time.perf_counter()
         for _ in range(iters):
             fn(params, x).block_until_ready()

@@ -1,0 +1,150 @@
+"""Engine-level fusion planner: conv[+relu][+pool] → super-layers.
+
+CNNdroid's headline wins come from eliminating redundant memory passes
+(fused bias/ReLU epilogues, the Fig. 5 overlap).  This module extends
+that idea across layers: it scans a ``NetworkDef`` and greedily groups a
+conv layer, an optional standalone ReLU, and an immediately-following
+pool layer into one ``FusedLayerSpec``.  The engine executes a group as a
+single dispatch — on the Pallas path the conv kernel pools its band in
+VMEM and writes only the pooled activation (the intermediate conv output
+never touches HBM); on the XLA path the whole group runs in one NHWC pass
+with a single layout round-trip.
+
+Correctness fallbacks — a group is NOT formed (the layers stay on the
+per-layer ladder) when:
+
+* the conv layer's execution method is not a SIMD method (``seq_ref`` and
+  ``basic_parallel`` keep the paper's un-fused per-layer semantics),
+* the pool kind is not max/avg,
+* the pool window is larger than the conv output (shape-checked by
+  propagating spatial dims through the net),
+* the conv or pool layer is named in ``no_fuse`` (per-layer opt-out,
+  mirroring ``per_layer_methods``),
+* a standalone ReLU sits between conv and pool but ``fuse_relu`` is off
+  (we will not reorder an activation we were told not to fold).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Iterable, List, Optional, Tuple, Union
+
+from repro.core.methods import Method
+from repro.core.netdefs import LayerSpec, NetworkDef
+
+#: methods whose kernels support the fused pooling epilogue
+FUSABLE_METHODS = frozenset({
+    Method.BASIC_SIMD, Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8,
+})
+
+SUPPORTED_POOL_KINDS = frozenset({"max", "avg"})
+
+
+@dataclass(frozen=True)
+class FusedLayerSpec:
+    """A conv→[ReLU]→pool→[ReLU] super-layer (one dispatch)."""
+    conv: LayerSpec
+    pool: LayerSpec
+    relu: bool        # ReLU between conv and pool (conv's own or absorbed)
+    pool_relu: bool   # ReLU after the pool (pool's own or absorbed)
+    names: Tuple[str, ...]  # original layer names this group covers
+
+    kind = "fused"  # sentinel so plan items can be dispatched on .kind
+
+    @property
+    def name(self) -> str:
+        return "+".join(self.names)
+
+
+PlanItem = Union[LayerSpec, FusedLayerSpec]
+
+
+def _conv_out_hw(h: int, w: int, spec: LayerSpec) -> Tuple[int, int]:
+    kh, kw = spec.kernel
+    return ((h + 2 * spec.padding[0] - kh) // spec.stride[0] + 1,
+            (w + 2 * spec.padding[1] - kw) // spec.stride[1] + 1)
+
+
+def _pool_out_hw(h: int, w: int, spec: LayerSpec) -> Tuple[int, int]:
+    kh, kw = spec.kernel
+    return ((h - kh) // spec.stride[0] + 1,
+            (w - kw) // spec.stride[1] + 1)
+
+
+def plan_fusion(net: NetworkDef, *,
+                method_for: Optional[Callable[[str], Method]] = None,
+                no_fuse: Iterable[str] = (),
+                fuse_relu: bool = True) -> List[PlanItem]:
+    """Greedy left-to-right grouping of conv[+relu][+pool] runs.
+
+    ``method_for`` maps a conv layer name to its execution ``Method`` (the
+    engine passes its per-layer resolution; ``None`` assumes fusable).
+    Returns the layer sequence with each fused run replaced by one
+    ``FusedLayerSpec``; ungrouped layers pass through unchanged.
+    """
+    no_fuse = frozenset(no_fuse)
+    layers = list(net.layers)
+    plan: List[PlanItem] = []
+    h, w = net.input_shape[1], net.input_shape[2]
+    i = 0
+    while i < len(layers):
+        spec = layers[i]
+        if spec.kind == "conv":
+            oh, ow = _conv_out_hw(h, w, spec)
+            group = _try_group(layers, i, oh, ow, method_for, no_fuse,
+                               fuse_relu)
+            if group is not None:
+                plan.append(group)
+                h, w = _pool_out_hw(oh, ow, group.pool)
+                i += len(group.names)
+                continue
+            h, w = oh, ow
+        elif spec.kind == "pool":
+            h, w = _pool_out_hw(h, w, spec)
+        plan.append(spec)
+        i += 1
+    return plan
+
+
+def _try_group(layers, i, oh, ow, method_for, no_fuse,
+               fuse_relu) -> Optional[FusedLayerSpec]:
+    """A FusedLayerSpec for the run starting at conv ``layers[i]``, or
+    None when any eligibility check fails (the per-layer fallback)."""
+    conv = layers[i]
+    if conv.name in no_fuse:
+        return None
+    if method_for is not None and method_for(conv.name) not in FUSABLE_METHODS:
+        return None
+    names = [conv.name]
+    relu = conv.relu
+    j = i + 1
+    if j < len(layers) and layers[j].kind == "relu":
+        if not fuse_relu:
+            return None  # a standalone ReLU we may not fold blocks fusion
+        relu = True
+        names.append(layers[j].name)
+        j += 1
+    if j >= len(layers) or layers[j].kind != "pool":
+        return None
+    pool = layers[j]
+    if pool.name in no_fuse:
+        return None
+    if pool.pool_kind not in SUPPORTED_POOL_KINDS:
+        return None
+    pkh, pkw = pool.kernel
+    if pkh < 1 or pkw < 1 or pool.stride[0] < 1 or pool.stride[1] < 1:
+        return None
+    if pkh > oh or pkw > ow:
+        return None  # pool window larger than the conv output
+    names.append(pool.name)
+    pool_relu = pool.relu
+    k = j + 1
+    if fuse_relu and k < len(layers) and layers[k].kind == "relu":
+        pool_relu = True
+        names.append(layers[k].name)
+    return FusedLayerSpec(conv=conv, pool=pool, relu=relu,
+                          pool_relu=pool_relu, names=tuple(names))
+
+
+def fusion_summary(plan: Iterable[PlanItem]) -> List[Tuple[str, ...]]:
+    """The fused groups in a plan, as tuples of original layer names."""
+    return [it.names for it in plan if isinstance(it, FusedLayerSpec)]

@@ -18,6 +18,10 @@ Ladder (paper table 3/4 columns):
                      patch reuse across an output-channel block + fused
                      bias/activation epilogue (on TPU: one MXU matmul per
                      patch block).
+
+``conv2d_pool_fused`` is the super-layer entry point used by the fusion
+planner (``repro.core.fusion``): one dispatch computes conv→ReLU→pool so
+the intermediate conv activation is never materialized between layers.
 """
 from __future__ import annotations
 
@@ -124,6 +128,48 @@ def conv2d_basic_parallel(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
 
 
 # ---------------------------------------------------------------------------
+# shared NHWC conv cores (used by the per-layer §4.3/§4.4 wrappers AND the
+# fused super-layer — one copy of the conv math)
+# ---------------------------------------------------------------------------
+
+
+def _conv_positions_nhwc(xp, wh, oh, ow, sy, sx):
+    """Basic-SIMD core: per-kernel-position vectorized channel dot over a
+    padded NHWC input; returns the fp32 [n, oh, ow, oc] pre-bias output."""
+    n, _, _, c = xp.shape
+    kh, kw, _, oc = wh.shape
+    out = jnp.zeros((n, oh, ow, oc), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xp, (0, i, j, 0),
+                (n, i + (oh - 1) * sy + 1, j + (ow - 1) * sx + 1, c),
+                (1, sy, sx, 1),
+            )  # [n, oh, ow, c]
+            # vectorized dot over the (innermost) channel axis
+            out = out + jnp.einsum(
+                "nhwc,co->nhwo", patch.astype(jnp.float32),
+                wh[i, j].astype(jnp.float32),
+            )
+    return out
+
+
+def _im2col_nhwc(xp, kh, kw, oh, ow, sy, sx):
+    """Advanced-SIMD im2col: one patch load reused for all oc blocks;
+    returns [n, oh, ow, kh*kw*c]."""
+    n, _, _, c = xp.shape
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(jax.lax.slice(
+                xp, (0, i, j, 0),
+                (n, i + (oh - 1) * sy + 1, j + (ow - 1) * sx + 1, c),
+                (1, sy, sx, 1),
+            ))
+    return jnp.concatenate(cols, axis=-1)
+
+
+# ---------------------------------------------------------------------------
 # §4.3 basic SIMD — dimension swapping, channels innermost
 # ---------------------------------------------------------------------------
 
@@ -147,19 +193,7 @@ def conv2d_basic_simd(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
     py, px = padding
     xp = jnp.pad(xh, ((0, 0), (py, py), (px, px), (0, 0)))
     oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
-    out = jnp.zeros((n, oh, ow, oc), jnp.float32)
-    for i in range(kh):
-        for j in range(kw):
-            patch = jax.lax.slice(
-                xp, (0, i, j, 0),
-                (n, i + (oh - 1) * sy + 1, j + (ow - 1) * sx + 1, c),
-                (1, sy, sx, 1),
-            )  # [n, oh, ow, c]
-            # vectorized dot over the (innermost) channel axis
-            out = out + jnp.einsum(
-                "nhwc,co->nhwo", patch.astype(jnp.float32),
-                wh[i, j].astype(jnp.float32),
-            )
+    out = _conv_positions_nhwc(xp, wh, oh, ow, sy, sx)
     out = out + b[None, None, None, :].astype(jnp.float32)
     if relu:
         out = jnp.maximum(out, 0.0)
@@ -193,16 +227,7 @@ def conv2d_advanced_simd(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
     py, px = padding
     xp = jnp.pad(xh, ((0, 0), (py, py), (px, px), (0, 0)))
     oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
-    # im2col: [n, oh, ow, kh*kw*c] — one patch load reused for all oc blocks
-    cols = []
-    for i in range(kh):
-        for j in range(kw):
-            cols.append(jax.lax.slice(
-                xp, (0, i, j, 0),
-                (n, i + (oh - 1) * sy + 1, j + (ow - 1) * sx + 1, c),
-                (1, sy, sx, 1),
-            ))
-    patches = jnp.concatenate(cols, axis=-1)  # [n, oh, ow, kh*kw*c]
+    patches = _im2col_nhwc(xp, kh, kw, oh, ow, sy, sx)  # [n, oh, ow, kh*kw*c]
     wmat = wh.reshape(kh * kw * c, oc)
     outs = []
     for o0 in range(0, oc, block):  # output-channel blocking (§4.4)
@@ -215,6 +240,75 @@ def conv2d_advanced_simd(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
             blk = jnp.maximum(blk, 0.0)
         outs.append(blk)
     out = jnp.concatenate(outs, axis=-1)
+    return nhwc_to_nchw(out.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused conv→ReLU→pool super-layer (engine fusion planner target)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_pool_fused(x, w, b, method: "Method", stride=(1, 1),
+                      padding=(0, 0), relu=False, pool_kernel=(2, 2),
+                      pool_stride=(2, 2), pool_kind: str = "max",
+                      pool_relu: bool = False, use_pallas=False,
+                      oh_block=None):
+    """One-dispatch conv→[ReLU]→pool→[ReLU] (a ``FusedLayerSpec``).
+
+    SIMD methods only — the planner falls back to the per-layer ladder for
+    ``seq_ref``/``basic_parallel``.  On the Pallas path the conv kernel
+    pools its oh-band in VMEM and writes only the pooled activation; the
+    XLA analogue runs the whole group in one NHWC pass (im2col matmul at
+    full output-channel width + ``reduce_window``) with a single layout
+    round-trip instead of one per layer.
+    """
+    if method == Method.BASIC_SIMD:
+        pallas_method = "basic_simd"
+    elif method in (Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8):
+        pallas_method = f"advanced_simd_{4 if method == Method.ADVANCED_SIMD_4 else 8}"
+    else:
+        raise ValueError(f"fused super-layer requires a SIMD method: {method}")
+    if use_pallas:
+        from repro.kernels.conv2d import ops as conv_ops
+
+        return conv_ops.conv2d(x, w, b, stride, padding, relu,
+                               method=pallas_method, oh_block=oh_block,
+                               pool_kernel=pool_kernel,
+                               pool_stride=pool_stride, pool_kind=pool_kind,
+                               pool_relu=pool_relu)
+    xh = nchw_to_nhwc(x)  # one layout round-trip for the whole group
+    wh = oihw_to_hwio(w)
+    n, h, wd, c = xh.shape
+    kh, kw, _, oc = wh.shape
+    sy, sx = stride
+    py, px = padding
+    xp = jnp.pad(xh, ((0, 0), (py, py), (px, px), (0, 0)))
+    oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
+    if method == Method.BASIC_SIMD:
+        out = _conv_positions_nhwc(xp, wh, oh, ow, sy, sx)
+    else:
+        # super-layer im2col: full-width matmul (the Pallas kernel's
+        # 128-wide MXU tile, not the per-layer 4/8 sub-blocks)
+        patches = _im2col_nhwc(xp, kh, kw, oh, ow, sy, sx)
+        out = jnp.einsum("nhwk,ko->nhwo", patches.astype(jnp.float32),
+                         wh.reshape(kh * kw * c, oc).astype(jnp.float32))
+    out = out + b[None, None, None, :].astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    pkh, pkw = pool_kernel
+    psy, psx = pool_stride
+    if pool_kind == "max":
+        out = jax.lax.reduce_window(
+            out, -jnp.inf, jax.lax.max, (1, pkh, pkw, 1), (1, psy, psx, 1),
+            "VALID")
+    elif pool_kind == "avg":
+        out = jax.lax.reduce_window(
+            out, 0.0, jax.lax.add, (1, pkh, pkw, 1), (1, psy, psx, 1),
+            "VALID") / float(pkh * pkw)
+    else:
+        raise ValueError(pool_kind)
+    if pool_relu:
+        out = jnp.maximum(out, 0.0)
     return nhwc_to_nchw(out.astype(x.dtype))
 
 

@@ -32,6 +32,15 @@ VMEM budget: block shapes keep the minor dimension lane-aligned when the
 channel count allows (ops.py pads channels — the paper's divisible-by-4
 observation at lane width 128/8); the heuristic targets half of the ~16 MB
 per-core VMEM to leave room for double buffering.
+
+Fused pooling epilogue (super-layers): both SIMD kernels accept an
+optional ``pool=(pkh, pkw, psy, psx, kind, pool_relu)``.  A grid cell then
+computes the conv-output band that feeds ``ph_block`` *pooled* rows — the
+conv band is ``(ph_block-1)*psy + pkh`` rows, i.e. the oh-band snapped to
+the pool stride and widened by the pool-window halo — applies bias+ReLU,
+pools it in VMEM (``pool2d.kernels.pool_band``), and writes only the
+pooled band.  The intermediate conv activation never touches HBM: one
+dispatch, one HBM write, for what the per-layer ladder did in two passes.
 """
 from __future__ import annotations
 
@@ -175,14 +184,85 @@ def _plan_oh_tiles(xp, oh, kh, kw, sy, oh_block, ow, oc_block,
 
 
 # ---------------------------------------------------------------------------
+# shared pooled-band plumbing for the fused conv→ReLU→pool kernels
+# ---------------------------------------------------------------------------
+
+
+def _plan_pool_tiles(xp, oh, ow, kh, kw, sy, oh_block, oc_block, pool,
+                     im2col=True):
+    """Band geometry for a fused conv+pool cell.
+
+    Resolves the conv oh-band from the VMEM budget, snaps it down to whole
+    pool windows (``ph_block`` pooled rows ⇒ ``(ph_block-1)*psy + pkh``
+    conv rows per cell), and pads the input so every band is full.
+    Returns ``(xp, ph_block, n_tiles, band, cband, ph, pw, row_step)``
+    where ``band`` is input rows per cell, ``cband`` conv rows per cell,
+    ``(ph, pw)`` the pooled output size, and ``row_step`` the input-row
+    stride between consecutive bands.
+
+    Floor: a fused cell can never hold fewer than one pool window of conv
+    rows, so when the budget-resolved oh-band is smaller than ``pkh`` the
+    cell is widened to ``cband = pkh`` anyway — exceeding the *soft*
+    VMEM_BUDGET_BYTES target (half of VMEM) by up to the pool-window
+    factor.  All paper shapes stay far under the hard limit; shapes that
+    would not should be kept un-fused by the planner (ROADMAP open item).
+    """
+    pkh, pkw, psy, psx = pool
+    n, hp, wp, c = xp.shape
+    ph, pw = (oh - pkh) // psy + 1, (ow - pkw) // psx + 1
+    if ph < 1 or pw < 1:
+        raise ValueError(
+            f"pool window ({pkh},{pkw}) larger than conv output ({oh},{ow})")
+    ohb = resolve_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block, oh_block,
+                           im2col=im2col)
+    # snap the conv band to the pool stride: the largest pooled-row count
+    # whose conv band fits inside the resolved oh-band
+    phb = max(1, (ohb - pkh) // psy + 1) if ohb >= pkh else 1
+    phb = min(phb, ph)
+    n_tiles = -(-ph // phb)
+    cband = (phb - 1) * psy + pkh           # conv rows per cell
+    band = (cband - 1) * sy + kh            # input rows per cell (halo incl.)
+    row_step = phb * psy * sy
+    hp_need = (n_tiles - 1) * row_step + band
+    if hp_need > hp:
+        xp = jnp.pad(xp, ((0, 0), (0, hp_need - hp), (0, 0), (0, 0)))
+    return xp, phb, n_tiles, band, cband, ph, pw, row_step
+
+
+def _pool_epilogue(acc, o_ref, pool, conv_relu):
+    """Shared epilogue: bias-added fp32 conv rows → (ReLU) → pooled band.
+
+    ``acc``: [conv_rows * conv_ow, OC] fp32; writes o_ref [PH_BLK, PW, OC].
+    """
+    from repro.kernels.pool2d.kernels import pool_band  # deferred: no cycle
+
+    pkh, pkw, psy, psx, kind, pool_relu, conv_ow = pool
+    phh, pww, oc = o_ref.shape
+    if conv_relu:
+        acc = jnp.maximum(acc, 0.0)
+    cband = (phh - 1) * psy + pkh
+    out = pool_band(acc.reshape(cband, conv_ow, oc), phh, pww,
+                    pkh, pkw, psy, psx, kind)
+    if pool_relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
 # §4.3 basic SIMD — NHWC, vectorized channel dot per kernel position
 # ---------------------------------------------------------------------------
 
 
-def _basic_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx, relu):
+def _basic_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx, relu,
+                       pool=None):
     # x_ref: [1, BAND, WP, C] (input-row band); w_ref: [KH, KW, C, OC];
-    # o_ref: [OH_BLK, OW, OC]
-    ohh, oww, oc = o_ref.shape
+    # o_ref: [OH_BLK, OW, OC] (unfused) or [PH_BLK, PW, OC] (fused pool)
+    if pool is None:
+        ohh, oww, oc = o_ref.shape
+    else:
+        pkh, _, psy, _, _, _, conv_ow = pool
+        phh, _, oc = o_ref.shape
+        ohh, oww = (phh - 1) * psy + pkh, conv_ow  # conv rows this cell owns
     x = x_ref[0]
     acc = jnp.zeros((ohh * oww, oc), jnp.float32)
     for i in range(kh):
@@ -199,25 +279,43 @@ def _basic_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx, relu):
                 preferred_element_type=jnp.float32,
             )  # vectorized dot over channels (the paper's 4-wide, here 128)
     acc = acc + b_ref[...].astype(jnp.float32)
+    if pool is not None:  # fused super-layer: pool in VMEM, write pooled band
+        _pool_epilogue(acc, o_ref, pool, relu)
+        return
     if relu:
         acc = jnp.maximum(acc, 0.0)
     o_ref[...] = acc.reshape(ohh, oww, oc).astype(o_ref.dtype)
 
 
 def conv2d_basic_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
-                      relu=False, oh_block=None, interpret: bool = False):
+                      relu=False, oh_block=None, interpret: bool = False,
+                      pool_kernel=None, pool_stride=None,
+                      pool_kind: str = "max", pool_relu: bool = False):
     n, h, wd, c = x_nhwc.shape
     kh, kw, _, oc = w_hwio.shape
     sy, sx = stride
     py, px = padding
     xp = jnp.pad(x_nhwc, ((0, 0), (py, py), (px, px), (0, 0)))
     oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
-    xp, ohb, n_tiles, band = _plan_oh_tiles(xp, oh, kh, kw, sy, oh_block,
-                                            ow, oc, im2col=False)
+    if pool_kernel is not None:
+        # fused super-layer: each cell writes a pooled band, the conv
+        # activation stays in VMEM
+        pkh, pkw = pool_kernel
+        psy, psx = pool_stride if pool_stride is not None else pool_kernel
+        xp, phb, n_tiles, band, _, ph, pw, row_step = _plan_pool_tiles(
+            xp, oh, ow, kh, kw, sy, oh_block, oc,
+            (pkh, pkw, psy, psx), im2col=False)
+        pool = (pkh, pkw, psy, psx, pool_kind, pool_relu, ow)
+        out_rows, out_cols = phb, pw
+    else:
+        xp, ohb, n_tiles, band = _plan_oh_tiles(xp, oh, kh, kw, sy, oh_block,
+                                                ow, oc, im2col=False)
+        pool = None
+        row_step = ohb * sy
+        out_rows, out_cols = ohb, ow
     wp = xp.shape[2]
-    row_step = ohb * sy
     kern = functools.partial(_basic_simd_kernel, kh=kh, kw=kw, sy=sy, sx=sx,
-                             relu=relu)
+                             relu=relu, pool=pool)
     out = pl.pallas_call(
         kern,
         grid=(n, n_tiles),
@@ -229,16 +327,16 @@ def conv2d_basic_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
             pl.BlockSpec((kh, kw, c, oc), lambda i, t: (0, 0, 0, 0)),
             pl.BlockSpec((oc,), lambda i, t: (0,)),
         ],
-        out_specs=pl.BlockSpec((None, ohb, ow, oc),
+        out_specs=pl.BlockSpec((None, out_rows, out_cols, oc),
                                lambda i, t: (i, t, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, n_tiles * ohb, ow, oc),
+        out_shape=jax.ShapeDtypeStruct((n, n_tiles * out_rows, out_cols, oc),
                                        x_nhwc.dtype),
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,
     )(xp, w_hwio, b)
-    return out[:, :oh]
+    return out[:, :ph] if pool_kernel is not None else out[:, :oh]
 
 
 # ---------------------------------------------------------------------------
@@ -247,10 +345,15 @@ def conv2d_basic_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
 
 
 def _advanced_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
-                          relu):
+                          relu, pool=None):
     # x_ref: [1, BAND, WP, C] (input-row band); w_ref: [KH*KW*C, OC_BLK];
-    # o_ref: [OH_BLK, OW, OC_BLK]
-    ohh, oww, ocb = o_ref.shape
+    # o_ref: [OH_BLK, OW, OC_BLK] (unfused) or [PH_BLK, PW, OC_BLK] (fused)
+    if pool is None:
+        ohh, oww, ocb = o_ref.shape
+    else:
+        pkh, _, psy, _, _, _, conv_ow = pool
+        phh, _, ocb = o_ref.shape
+        ohh, oww = (phh - 1) * psy + pkh, conv_ow  # conv rows this cell owns
     x = x_ref[0]
     cols = []
     for i in range(kh):  # im2col built once per spatial tile, reused for
@@ -265,6 +368,9 @@ def _advanced_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
     acc = jnp.dot(patches.astype(jnp.float32), w_ref[...].astype(jnp.float32),
                   preferred_element_type=jnp.float32)  # one MXU matmul
     acc = acc + b_ref[...].astype(jnp.float32)
+    if pool is not None:  # fused super-layer: pool in VMEM, write pooled band
+        _pool_epilogue(acc, o_ref, pool, relu)
+        return
     if relu:  # fused epilogue in VMEM — zero-cost ReLU (Fig. 5)
         acc = jnp.maximum(acc, 0.0)
     o_ref[...] = acc.reshape(ohh, oww, ocb).astype(o_ref.dtype)
@@ -272,7 +378,9 @@ def _advanced_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
 
 def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
                          relu=False, oc_block: int = 128, oh_block=None,
-                         interpret: bool = False):
+                         interpret: bool = False, pool_kernel=None,
+                         pool_stride=None, pool_kind: str = "max",
+                         pool_relu: bool = False):
     n, h, wd, c = x_nhwc.shape
     kh, kw, _, oc = w_hwio.shape
     sy, sx = stride
@@ -286,12 +394,24 @@ def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
         wmat = jnp.pad(wmat, ((0, 0), (0, pad_oc)))
         b = jnp.pad(b, (0, pad_oc))
     ocp = oc + pad_oc
-    xp, ohb, n_tiles, band = _plan_oh_tiles(xp, oh, kh, kw, sy, oh_block,
-                                            ow, ocb)
+    if pool_kernel is not None:
+        # fused super-layer: each cell writes a pooled band, the conv
+        # activation stays in VMEM
+        pkh, pkw = pool_kernel
+        psy, psx = pool_stride if pool_stride is not None else pool_kernel
+        xp, phb, n_tiles, band, _, ph, pw, row_step = _plan_pool_tiles(
+            xp, oh, ow, kh, kw, sy, oh_block, ocb, (pkh, pkw, psy, psx))
+        pool = (pkh, pkw, psy, psx, pool_kind, pool_relu, ow)
+        out_rows, out_cols = phb, pw
+    else:
+        xp, ohb, n_tiles, band = _plan_oh_tiles(xp, oh, kh, kw, sy, oh_block,
+                                                ow, ocb)
+        pool = None
+        row_step = ohb * sy
+        out_rows, out_cols = ohb, ow
     wp = xp.shape[2]
-    row_step = ohb * sy
     kern = functools.partial(_advanced_simd_kernel, kh=kh, kw=kw, sy=sy,
-                             sx=sx, relu=relu)
+                             sx=sx, relu=relu, pool=pool)
     out = pl.pallas_call(
         kern,
         grid=(n, n_tiles, ocp // ocb),
@@ -303,13 +423,15 @@ def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
             pl.BlockSpec((kh * kw * c, ocb), lambda i, t, o: (0, o)),
             pl.BlockSpec((ocb,), lambda i, t, o: (o,)),
         ],
-        out_specs=pl.BlockSpec((None, ohb, ow, ocb),
+        out_specs=pl.BlockSpec((None, out_rows, out_cols, ocb),
                                lambda i, t, o: (i, t, 0, o)),
-        out_shape=jax.ShapeDtypeStruct((n, n_tiles * ohb, ow, ocp),
+        out_shape=jax.ShapeDtypeStruct((n, n_tiles * out_rows, out_cols, ocp),
                                        x_nhwc.dtype),
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")
         ),
         interpret=interpret,
     )(xp, wmat, b)
+    if pool_kernel is not None:
+        return out[:, :ph, :, :oc]
     return out[:, :oh, :, :oc]

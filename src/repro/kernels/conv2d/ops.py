@@ -35,13 +35,24 @@ def _on_tpu() -> bool:
 
 
 @partial(jax.jit, static_argnames=("stride", "padding", "relu", "method",
-                                   "oh_block", "interpret"))
+                                   "oh_block", "interpret", "pool_kernel",
+                                   "pool_stride", "pool_kind", "pool_relu"))
 def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
            method: str = "advanced_simd_128", oh_block: int = None,
-           interpret: bool = None):
-    """x: [N, C, H, W]; w: [OC, C, KH, KW]; b: [OC]."""
+           interpret: bool = None, pool_kernel=None, pool_stride=None,
+           pool_kind: str = "max", pool_relu: bool = False):
+    """x: [N, C, H, W]; w: [OC, C, KH, KW]; b: [OC].
+
+    ``pool_kernel``/``pool_stride`` (SIMD methods only) fuse a VALID
+    max/avg pooling epilogue into the conv kernel — the super-layer path:
+    the conv activation never leaves VMEM and only the pooled band is
+    written.  ``relu`` applies between conv and pool, ``pool_relu`` after
+    the pool.
+    """
     interp = (not _on_tpu()) if interpret is None else interpret
     if method == "basic_parallel":
+        if pool_kernel is not None:
+            raise ValueError("fused pooling epilogue requires a SIMD method")
         return K.conv2d_basic_parallel(x, w, b, stride, padding, relu,
                                        interpret=interp)
     # SIMD methods: dimension swapping + channel padding (§4.3)
@@ -51,12 +62,19 @@ def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
     wh, _ = pad_axis(wh, 2, SUBLANES)
     if method == "basic_simd":
         out = K.conv2d_basic_simd(xh, wh, b, stride, padding, relu,
-                                  oh_block=oh_block, interpret=interp)
+                                  oh_block=oh_block, interpret=interp,
+                                  pool_kernel=pool_kernel,
+                                  pool_stride=pool_stride,
+                                  pool_kind=pool_kind, pool_relu=pool_relu)
     elif method.startswith("advanced_simd"):
         blk = int(method.rsplit("_", 1)[1]) if method[-1].isdigit() else 128
         out = K.conv2d_advanced_simd(xh, wh, b, stride, padding, relu,
                                      oc_block=blk, oh_block=oh_block,
-                                     interpret=interp)
+                                     interpret=interp,
+                                     pool_kernel=pool_kernel,
+                                     pool_stride=pool_stride,
+                                     pool_kind=pool_kind,
+                                     pool_relu=pool_relu)
     else:
         raise ValueError(method)
     return nhwc_to_nchw(out)

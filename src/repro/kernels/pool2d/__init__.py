@@ -1,0 +1,2 @@
+"""Pallas pooling kernels (max/avg, oh-band tiled) — the pooling half of
+the fused conv→ReLU→pool super-layers."""

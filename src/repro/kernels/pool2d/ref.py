@@ -1,0 +1,27 @@
+"""XLA reference pooling (NCHW reduce_window) — the pre-fusion engine path
+and the correctness oracle for the Pallas pool kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pool2d_ref(x, kernel=(2, 2), stride=(2, 2), kind: str = "max",
+               relu: bool = False):
+    """x: [N, C, H, W]; VALID window semantics (the engine's pools)."""
+    kh, kw = kernel
+    sy, sx = stride
+    if kind == "max":
+        out = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 1, kh, kw), (1, 1, sy, sx), "VALID"
+        )
+    elif kind == "avg":
+        out = jax.lax.reduce_window(
+            x.astype(jnp.float32), 0.0, jax.lax.add,
+            (1, 1, kh, kw), (1, 1, sy, sx), "VALID"
+        ) / float(kh * kw)
+    else:
+        raise ValueError(kind)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)

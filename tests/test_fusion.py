@@ -1,0 +1,251 @@
+"""Fusion subsystem tests: planner grouping/fallbacks, fused-kernel
+correctness (interpret-mode Pallas), and whole-network fused-vs-unfused
+equivalence across the three paper networks × methods."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.engine import CNNEngine, _lrn
+from repro.core.fusion import (
+    FusedLayerSpec,
+    fusion_summary,
+    plan_fusion,
+)
+from repro.core.methods import Method, conv2d_pool_fused
+from repro.core.netdefs import NETWORKS, LayerSpec, NetworkDef
+from repro.kernels.conv2d.ops import conv2d as conv2d_pallas
+from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.pool2d.ref import pool2d_ref
+
+SIMD = Method.ADVANCED_SIMD_8
+
+
+# ---------------------------------------------------------------------------
+# planner: groups formed
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("net_name,expected", [
+    ("lenet5", [("conv1", "pool1"), ("conv2", "pool2")]),
+    ("cifar10", [("conv1", "pool1"), ("conv2", "pool2"),
+                 ("conv3", "pool3")]),
+    ("alexnet", [("conv1", "pool1"), ("conv2", "pool2"),
+                 ("conv5", "pool5")]),
+])
+def test_planner_groups(net_name, expected):
+    plan = plan_fusion(NETWORKS[net_name](), method_for=lambda n: SIMD)
+    assert fusion_summary(plan) == expected
+
+
+def test_planner_preserves_ungrouped_layers():
+    net = NETWORKS["alexnet"]()
+    plan = plan_fusion(net, method_for=lambda n: SIMD)
+    kinds = [it.kind for it in plan]
+    # conv3/conv4 have no following pool: they stay per-layer
+    assert kinds.count("conv") == 2 and kinds.count("fused") == 3
+    assert kinds.count("lrn") == 2  # LRN never fuses
+    # every original layer is accounted for exactly once
+    covered = [n for it in plan
+               for n in (it.names if isinstance(it, FusedLayerSpec)
+                         else (it.name,))]
+    assert covered == [l.name for l in net.layers]
+
+
+def test_planner_absorbs_standalone_relu():
+    net = NetworkDef("t", (3, 16, 16), 4, (
+        LayerSpec("conv", "c", out_channels=4, kernel=(3, 3)),
+        LayerSpec("relu", "r"),
+        LayerSpec("pool", "p", kernel=(2, 2), stride=(2, 2)),
+        LayerSpec("relu", "r2"),
+    ))
+    plan = plan_fusion(net, method_for=lambda n: SIMD)
+    assert len(plan) == 1
+    (g,) = plan
+    assert g.names == ("c", "r", "p", "r2") and g.relu and g.pool_relu
+
+
+def test_planner_fallbacks():
+    net = NETWORKS["lenet5"]()
+    # non-SIMD method: per-layer ladder kept
+    assert fusion_summary(plan_fusion(
+        net, method_for=lambda n: Method.BASIC_PARALLEL)) == []
+    # per-layer opt-out (conv or pool name)
+    assert fusion_summary(plan_fusion(
+        net, method_for=lambda n: SIMD,
+        no_fuse={"conv1"})) == [("conv2", "pool2")]
+    assert fusion_summary(plan_fusion(
+        net, method_for=lambda n: SIMD,
+        no_fuse={"pool2"})) == [("conv1", "pool1")]
+    # a standalone ReLU we may not fold blocks the group
+    net_r = NetworkDef("t", (3, 16, 16), 4, (
+        LayerSpec("conv", "c", out_channels=4, kernel=(3, 3)),
+        LayerSpec("relu", "r"),
+        LayerSpec("pool", "p", kernel=(2, 2), stride=(2, 2)),
+    ))
+    assert fusion_summary(plan_fusion(
+        net_r, method_for=lambda n: SIMD, fuse_relu=False)) == []
+
+
+def test_planner_unsupported_shapes_fall_back():
+    # unsupported pool kind
+    net = NetworkDef("t", (3, 16, 16), 4, (
+        LayerSpec("conv", "c", out_channels=4, kernel=(3, 3)),
+        LayerSpec("pool", "p", kernel=(2, 2), stride=(2, 2),
+                  pool_kind="stochastic"),
+    ))
+    assert fusion_summary(plan_fusion(net, method_for=lambda n: SIMD)) == []
+    # pool window larger than the conv output (14x14 conv out, 15x15 pool)
+    net2 = NetworkDef("t", (3, 16, 16), 4, (
+        LayerSpec("conv", "c", out_channels=4, kernel=(3, 3)),
+        LayerSpec("pool", "p", kernel=(15, 15), stride=(1, 1)),
+    ))
+    assert fusion_summary(plan_fusion(net2, method_for=lambda n: SIMD)) == []
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas kernels vs the per-layer reference (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def _case(n, c, h, w_, oc, k, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, c, h, w_),
+                          jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (oc, c, k, k)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(seed + 2), (oc,))
+    return x, w, b
+
+
+@pytest.mark.parametrize("method", ["basic_simd", "advanced_simd_128"])
+@pytest.mark.parametrize("kind", ["max", "avg"])
+@pytest.mark.parametrize("conv_stride,pad,pk,ps", [
+    ((1, 1), (2, 2), (3, 3), (2, 2)),   # overlapping pool (paper nets)
+    ((2, 2), (0, 0), (2, 2), (2, 2)),   # strided conv + disjoint pool
+])
+def test_fused_kernel_matches_per_layer(method, kind, conv_stride, pad,
+                                        pk, ps):
+    x, w, b = _case(2, 5, 20, 18, 7, 5)
+    ref = pool2d_ref(conv2d_ref(x, w, b, conv_stride, pad, relu=True),
+                     pk, ps, kind)
+    out = conv2d_pallas(x, w, b, conv_stride, pad, relu=True, method=method,
+                        interpret=True, pool_kernel=pk, pool_stride=ps,
+                        pool_kind=kind)
+    assert out.shape == ref.shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+@pytest.mark.parametrize("method", ["basic_simd", "advanced_simd_128"])
+def test_fused_kernel_multi_tile(method):
+    """Tiny oh_block forces multiple pooled bands per frame; the band
+    snapping (conv rows per pooled row) and pool_relu epilogue hold."""
+    x, w, b = _case(1, 4, 33, 21, 6, 3)
+    ref = pool2d_ref(conv2d_ref(x, w, b, (1, 1), (1, 1), relu=False),
+                     (3, 3), (2, 2), "max", relu=True)
+    out = conv2d_pallas(x, w, b, (1, 1), (1, 1), relu=False, method=method,
+                        interpret=True, oh_block=5, pool_kernel=(3, 3),
+                        pool_stride=(2, 2), pool_kind="max", pool_relu=True)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+def test_fused_rejects_basic_parallel():
+    x, w, b = _case(1, 3, 8, 8, 4, 3)
+    with pytest.raises(ValueError, match="SIMD"):
+        conv2d_pallas(x, w, b, method="basic_parallel", interpret=True,
+                      pool_kernel=(2, 2), pool_stride=(2, 2))
+    with pytest.raises(ValueError, match="SIMD"):
+        conv2d_pool_fused(x, w, b, Method.SEQ_REF)
+
+
+# ---------------------------------------------------------------------------
+# whole-network fused vs unfused (all three paper networks × methods)
+# ---------------------------------------------------------------------------
+
+_NET_BATCH = {"lenet5": 4, "cifar10": 4, "alexnet": 1}
+
+
+@pytest.fixture(scope="module", params=["lenet5", "cifar10", "alexnet"])
+def net_params_ref(request):
+    net = NETWORKS[request.param]()
+    eng = CNNEngine(net, method=Method.SEQ_REF)
+    params = eng.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (_NET_BATCH[request.param], *net.input_shape),
+                          jnp.float32)
+    return net, params, x, eng.forward(params, x)
+
+
+@pytest.mark.parametrize("method", [Method.BASIC_SIMD,
+                                    Method.ADVANCED_SIMD_4,
+                                    Method.ADVANCED_SIMD_8])
+def test_network_fused_matches_unfused(net_params_ref, method):
+    net, params, x, ref = net_params_ref
+    eng = CNNEngine(net, method=method, fuse_pool=True)
+    assert fusion_summary(eng.plan(True))  # groups actually formed
+    out = eng.forward(params, x, fuse=True)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+    # un-fused path of the same engine agrees too
+    out_u = eng.forward(params, x, fuse=False)
+    assert jnp.max(jnp.abs(out - out_u)) < 1e-4
+
+
+def test_network_fused_pallas_interpret(net_params_ref):
+    net, params, x, ref = net_params_ref
+    eng = CNNEngine(net, method=Method.ADVANCED_SIMD_8, use_pallas=True)
+    out = eng.forward(params, x, fuse=True)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+def test_per_layer_fuse_opt_out(net_params_ref):
+    net, params, x, ref = net_params_ref
+    conv_names = [l.name for l in net.layers if l.kind == "conv"]
+    eng = CNNEngine(net, method=SIMD,
+                    per_layer_fuse={conv_names[0]: False})
+    groups = fusion_summary(eng.plan(True))
+    assert all(conv_names[0] not in g for g in groups)
+    assert jnp.max(jnp.abs(eng.forward(params, x) - ref)) < 1e-4
+
+
+def test_collect_forces_per_layer_path(net_params_ref):
+    """Instrumentation still sees every layer's activation when fused."""
+    net, params, x, ref = net_params_ref
+    eng = CNNEngine(net, method=SIMD, fuse_pool=True)
+    acts = {}
+    out = eng.forward(params, x, collect=acts)
+    assert set(acts) == {l.name for l in net.layers}
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+def test_jit_forward_memoized():
+    net = NETWORKS["lenet5"]()
+    eng = CNNEngine(net, method=SIMD)
+    assert eng.jit_forward() is eng.jit_forward()
+    assert eng.jit_forward(True) is eng.jit_forward(True)
+    assert eng.jit_forward(True) is not eng.jit_forward(False)
+    params = eng.init(jax.random.PRNGKey(0))
+    x = jnp.ones((2, *net.input_shape), jnp.float32)
+    assert jnp.max(jnp.abs(eng.jit_forward(True)(params, x)
+                           - eng.jit_forward(False)(params, x))) < 1e-4
+
+
+@pytest.mark.parametrize("lrn_n", [4, 5])  # even n needs asymmetric padding
+def test_lrn_vectorized_matches_loop(lrn_n):
+    spec = LayerSpec("lrn", "n", lrn_n=lrn_n, lrn_alpha=1e-4, lrn_beta=0.75,
+                     lrn_k=2.0)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 13, 6, 6), jnp.float32)
+    # the pre-vectorization reference: n shifted slice+adds
+    sq = x.astype(jnp.float32) ** 2
+    pad = spec.lrn_n // 2
+    sq_p = jnp.pad(sq, ((0, 0), (pad, pad), (0, 0), (0, 0)))
+    acc = sum(jax.lax.slice_in_dim(sq_p, i, i + x.shape[1], axis=1)
+              for i in range(spec.lrn_n))
+    ref = x / (spec.lrn_k + spec.lrn_alpha * acc) ** spec.lrn_beta
+    out = _lrn(x, spec)
+    assert out.shape == x.shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-6
+
+
+def test_fused_pool_stride_defaults_to_kernel():
+    x, w, b = _case(1, 4, 16, 16, 6, 3)
+    ref = pool2d_ref(conv2d_ref(x, w, b, relu=True), (2, 2), (2, 2), "max")
+    out = conv2d_pallas(x, w, b, relu=True, method="advanced_simd_128",
+                        interpret=True, pool_kernel=(2, 2))  # no pool_stride
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4

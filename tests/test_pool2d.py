@@ -1,0 +1,61 @@
+"""Pallas pool2d kernels vs the reduce_window reference (interpret mode):
+max/avg × stride/kernel combos, explicit/ragged/auto oh-bands, ReLU
+epilogue, and the NCHW ops wrapper's channel padding."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.pool2d.kernels import auto_oh_block_pool
+from repro.kernels.pool2d.ops import pool2d
+from repro.kernels.pool2d.ref import pool2d_ref
+
+
+def _x(n, c, h, w, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, c, h, w),
+                             jnp.float32)
+
+
+@pytest.mark.parametrize("kind", ["max", "avg"])
+@pytest.mark.parametrize("kernel,stride", [((2, 2), (2, 2)),
+                                           ((3, 3), (2, 2)),
+                                           ((3, 2), (1, 2))])
+def test_pool2d_matches_reference(kind, kernel, stride):
+    x = _x(2, 5, 17, 13)  # 5 channels: exercises the sublane padding
+    ref = pool2d_ref(x, kernel, stride, kind)
+    out = pool2d(x, kernel, stride, kind, interpret=True)
+    assert out.shape == ref.shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-5
+
+
+@pytest.mark.parametrize("kind", ["max", "avg"])
+@pytest.mark.parametrize("oh_block", [1, 2, 3, 64])
+def test_pool2d_oh_bands(kind, oh_block):
+    """Every band size — ragged last tiles included — matches the untiled
+    reference; band offsets are stride-aware."""
+    x = _x(1, 6, 23, 11)
+    ref = pool2d_ref(x, (3, 3), (2, 2), kind, relu=True)
+    out = pool2d(x, (3, 3), (2, 2), kind, relu=True, oh_block=oh_block,
+                 interpret=True)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-5
+
+
+def test_pool2d_negative_inputs_max():
+    """Max pooling must not leak the zero channel padding or the -inf
+    accumulator init into all-negative inputs."""
+    x = -jnp.abs(_x(1, 3, 8, 8)) - 1.0
+    ref = pool2d_ref(x, (2, 2), (2, 2), "max")
+    out = pool2d(x, (2, 2), (2, 2), "max", interpret=True)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-6
+    assert bool(jnp.all(out < 0))
+
+
+def test_auto_oh_block_pool_respects_budget():
+    # tiny budget forces single-row bands; big budget takes the whole frame
+    assert auto_oh_block_pool(64, 64, 64, 8, 3, 2, budget=4096) == 1
+    assert auto_oh_block_pool(64, 64, 64, 8, 3, 2,
+                              budget=1 << 30) == 64
+
+
+def test_pool2d_rejects_oversized_window():
+    with pytest.raises(ValueError, match="larger than"):
+        pool2d(_x(1, 3, 4, 4), (5, 5), (2, 2), "max", interpret=True)

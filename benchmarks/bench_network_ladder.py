@@ -87,7 +87,9 @@ def run_json(nets=("lenet5", "cifar10"), batch=BATCH, iters=3,
                     "in the super-layer's full-width oc matmul (vs the "
                     "per-layer 4/8-wide blocks); basic_simd fused ratios "
                     "share identical conv math with unfused and isolate "
-                    "the fusion win itself")}
+                    "the fusion win itself; fused_groups ending in a "
+                    "norm layer run the conv->relu->pool->LRN tail as "
+                    "one dispatch (PR 3 LRN epilogue)")}
     for name in nets:
         net = NETWORKS[name]()
         eng0 = CNNEngine(net, method=Method.SEQ_REF)

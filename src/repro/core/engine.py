@@ -7,9 +7,11 @@ The engine owns:
 * fused-activation scheduling (ReLU folded into the producing layer —
   the TPU-native realization of the paper's Fig. 5 CPU/GPU overlap),
 * super-layer fusion: ``repro.core.fusion.plan_fusion`` groups
-  conv[+relu][+pool] runs into single dispatches (``fuse_pool``, on by
-  default, with per-layer opt-outs via ``per_layer_fuse``) so the
-  intermediate conv activation never round-trips through HBM,
+  conv[+relu][+pool][+lrn] runs into single dispatches (``fuse_pool``, on
+  by default, with per-layer opt-outs via ``per_layer_fuse``) so neither
+  the conv activation nor — for AlexNet's pool→norm tails — the pooled
+  activation ever round-trips through HBM; a VMEM working-set check keeps
+  shapes whose floor cell cannot fit the budget on the per-layer ladder,
 * per-layer instrumentation used by the benchmark harness (``collect``
   forces the un-fused per-layer path so every activation is observable).
 
@@ -170,9 +172,11 @@ class CNNEngine:
             if use_fuse:
                 no = frozenset(n for n, v in self.per_layer_fuse.items()
                                if not v)
+                # the VMEM working-set check only binds on the Pallas
+                # path; the XLA analogue fuses regardless of cell size
                 self._plans[True] = plan_fusion(
                     self.net, method_for=self._method_for, no_fuse=no,
-                    fuse_relu=self.fuse_relu)
+                    fuse_relu=self.fuse_relu, vmem_check=self.use_pallas)
             else:
                 self._plans[False] = list(self.net.layers)
         return self._plans[use_fuse]
@@ -190,14 +194,20 @@ class CNNEngine:
         while i < len(items):
             spec = items[i]
             if isinstance(spec, FusedLayerSpec):
-                # super-layer: one dispatch, conv activation never lands
+                # super-layer: one dispatch, conv (and, with an absorbed
+                # LRN, pooled) activation never lands
                 p = params[spec.conv.name]
+                lrn = spec.lrn
                 x = conv2d_pool_fused(
                     x, p["w"], p["b"], self._method_for(spec.conv.name),
                     spec.conv.stride, spec.conv.padding, spec.relu,
                     spec.pool.kernel, spec.pool.stride, spec.pool.pool_kind,
                     spec.pool_relu, self.use_pallas,
-                    self._oh_block_for(spec.conv.name))
+                    self._oh_block_for(spec.conv.name),
+                    lrn_n=lrn.lrn_n if lrn is not None else None,
+                    lrn_alpha=lrn.lrn_alpha if lrn is not None else 1e-4,
+                    lrn_beta=lrn.lrn_beta if lrn is not None else 0.75,
+                    lrn_k=lrn.lrn_k if lrn is not None else 1.0)
                 i += 1
                 continue
             # fused-activation scheduling: a standalone relu following a

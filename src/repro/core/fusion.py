@@ -1,14 +1,15 @@
-"""Engine-level fusion planner: conv[+relu][+pool] → super-layers.
+"""Engine-level fusion planner: conv[+relu][+pool][+lrn] → super-layers.
 
 CNNdroid's headline wins come from eliminating redundant memory passes
 (fused bias/ReLU epilogues, the Fig. 5 overlap).  This module extends
 that idea across layers: it scans a ``NetworkDef`` and greedily groups a
-conv layer, an optional standalone ReLU, and an immediately-following
-pool layer into one ``FusedLayerSpec``.  The engine executes a group as a
-single dispatch — on the Pallas path the conv kernel pools its band in
-VMEM and writes only the pooled activation (the intermediate conv output
-never touches HBM); on the XLA path the whole group runs in one NHWC pass
-with a single layout round-trip.
+conv layer, an optional standalone ReLU, an immediately-following pool
+layer, and an immediately-following LRN layer into one
+``FusedLayerSpec``.  The engine executes a group as a single dispatch —
+on the Pallas path the conv kernel pools (and channel-normalizes) its
+band in VMEM and writes only the final activation (neither the conv nor
+the pooled intermediate ever touches HBM); on the XLA path the whole
+group runs in one NHWC pass with a single layout round-trip.
 
 Correctness fallbacks — a group is NOT formed (the layers stay on the
 per-layer ladder) when:
@@ -18,10 +19,19 @@ per-layer ladder) when:
 * the pool kind is not max/avg,
 * the pool window is larger than the conv output (shape-checked by
   propagating spatial dims through the net),
-* the conv or pool layer is named in ``no_fuse`` (per-layer opt-out,
-  mirroring ``per_layer_methods``),
+* the conv, pool, or lrn layer is named in ``no_fuse`` (per-layer
+  opt-out, mirroring ``per_layer_methods``; an opted-out LRN only drops
+  the LRN from the group — conv+pool still fuse),
 * a standalone ReLU sits between conv and pool but ``fuse_relu`` is off
-  (we will not reorder an activation we were told not to fold).
+  (we will not reorder an activation we were told not to fold),
+* the VMEM working-set check fails (Pallas path — the engine passes
+  ``vmem_check=use_pallas``, since the one-pass XLA analogue has no VMEM
+  ceiling): the fused kernel shrinks its pooled band (``oh_block``) to
+  fit the soft budget, but its floor cell is one pool window of conv
+  rows — when even THAT cell's modelled footprint (halo-widened input
+  band + patch staging + weights + conv band + pooled band, via
+  ``kernels.fused_cell_bytes``) exceeds the budget, the planner keeps
+  the run un-fused instead of compiling a cell that cannot fit.
 """
 from __future__ import annotations
 
@@ -36,17 +46,27 @@ FUSABLE_METHODS = frozenset({
     Method.BASIC_SIMD, Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8,
 })
 
+#: methods whose fused kernel stages a full im2col patch matrix (the
+#: advanced oc-blocked kernels; basic_simd holds one [rows, C] slice)
+IM2COL_METHODS = frozenset({Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8})
+
 SUPPORTED_POOL_KINDS = frozenset({"max", "avg"})
+
+#: oc tile width each advanced method's fused kernel actually runs with
+#: (``conv2d_pool_fused`` maps the method to ``advanced_simd_4``/``_8``
+#: and ``conv2d.ops`` parses the block out of that name)
+_ADVANCED_OC_BLOCK = {Method.ADVANCED_SIMD_4: 4, Method.ADVANCED_SIMD_8: 8}
 
 
 @dataclass(frozen=True)
 class FusedLayerSpec:
-    """A conv→[ReLU]→pool→[ReLU] super-layer (one dispatch)."""
+    """A conv→[ReLU]→pool→[ReLU]→[LRN] super-layer (one dispatch)."""
     conv: LayerSpec
     pool: LayerSpec
     relu: bool        # ReLU between conv and pool (conv's own or absorbed)
     pool_relu: bool   # ReLU after the pool (pool's own or absorbed)
     names: Tuple[str, ...]  # original layer names this group covers
+    lrn: Optional[LayerSpec] = None  # trailing LRN absorbed into the cell
 
     kind = "fused"  # sentinel so plan items can be dispatched on .kind
 
@@ -70,28 +90,66 @@ def _pool_out_hw(h: int, w: int, spec: LayerSpec) -> Tuple[int, int]:
             (w - kw) // spec.stride[1] + 1)
 
 
+def fused_working_set(conv: LayerSpec, pool: LayerSpec, method: Method,
+                      cin: int, w_in: int, *,
+                      lrn: bool = False) -> int:
+    """Modelled VMEM bytes of the smallest possible fused grid cell (one
+    pooled row — one pool window of conv rows) for this conv+pool pair.
+
+    Mirrors what ``conv2d.ops`` + the kernels will actually stage: the
+    input channel count is padded to the sublane multiple, the advanced
+    methods charge a full im2col patch matrix and the 4/8-wide oc tile
+    their fused kernel runs with — widened to the FULL output-channel
+    width when ``lrn`` is set, because the LRN epilogue needs every
+    channel of a pooled row in one cell (basic_simd is always full
+    width).
+    """
+    from repro.kernels.conv2d import kernels as K  # deferred: keeps the
+    from repro.kernels.conv2d.ops import SUBLANES  # planner importable
+    # without pulling Pallas in at module-import time
+
+    c = -(-cin // SUBLANES) * SUBLANES
+    oc = conv.out_channels
+    im2col = method in IM2COL_METHODS
+    ocb = oc if (lrn or not im2col) else min(_ADVANCED_OC_BLOCK[method], oc)
+    _, ow = _conv_out_hw(0, w_in, conv)  # h unused for the width
+    wp = w_in + 2 * conv.padding[1]
+    return K.fused_cell_bytes(
+        1, ow, wp, c, conv.kernel[0], conv.kernel[1], conv.stride[0], ocb,
+        (pool.kernel[0], pool.kernel[1], pool.stride[0], pool.stride[1]),
+        im2col=im2col)
+
+
 def plan_fusion(net: NetworkDef, *,
                 method_for: Optional[Callable[[str], Method]] = None,
                 no_fuse: Iterable[str] = (),
-                fuse_relu: bool = True) -> List[PlanItem]:
-    """Greedy left-to-right grouping of conv[+relu][+pool] runs.
+                fuse_relu: bool = True,
+                vmem_budget: Optional[int] = None,
+                vmem_check: bool = True) -> List[PlanItem]:
+    """Greedy left-to-right grouping of conv[+relu][+pool][+lrn] runs.
 
     ``method_for`` maps a conv layer name to its execution ``Method`` (the
-    engine passes its per-layer resolution; ``None`` assumes fusable).
+    engine passes its per-layer resolution; ``None`` assumes the widest
+    fused working set, the advanced im2col kernels).  ``vmem_budget``
+    overrides the soft VMEM budget the working-set check runs against
+    (None = ``kernels.VMEM_BUDGET_BYTES``); ``vmem_check=False`` skips
+    the check entirely — the engine passes its ``use_pallas`` here, since
+    the one-NHWC-pass XLA analogue has no VMEM ceiling to respect.
     Returns the layer sequence with each fused run replaced by one
     ``FusedLayerSpec``; ungrouped layers pass through unchanged.
     """
     no_fuse = frozenset(no_fuse)
     layers = list(net.layers)
     plan: List[PlanItem] = []
-    h, w = net.input_shape[1], net.input_shape[2]
+    c, h, w = net.input_shape
     i = 0
     while i < len(layers):
         spec = layers[i]
         if spec.kind == "conv":
             oh, ow = _conv_out_hw(h, w, spec)
             group = _try_group(layers, i, oh, ow, method_for, no_fuse,
-                               fuse_relu)
+                               fuse_relu, c, w, vmem_budget, vmem_check)
+            c = spec.out_channels
             if group is not None:
                 plan.append(group)
                 h, w = _pool_out_hw(oh, ow, group.pool)
@@ -105,14 +163,16 @@ def plan_fusion(net: NetworkDef, *,
     return plan
 
 
-def _try_group(layers, i, oh, ow, method_for, no_fuse,
-               fuse_relu) -> Optional[FusedLayerSpec]:
+def _try_group(layers, i, oh, ow, method_for, no_fuse, fuse_relu,
+               cin, w_in, vmem_budget,
+               vmem_check=True) -> Optional[FusedLayerSpec]:
     """A FusedLayerSpec for the run starting at conv ``layers[i]``, or
     None when any eligibility check fails (the per-layer fallback)."""
     conv = layers[i]
     if conv.name in no_fuse:
         return None
-    if method_for is not None and method_for(conv.name) not in FUSABLE_METHODS:
+    method = method_for(conv.name) if method_for is not None else None
+    if method is not None and method not in FUSABLE_METHODS:
         return None
     names = [conv.name]
     relu = conv.relu
@@ -141,8 +201,40 @@ def _try_group(layers, i, oh, ow, method_for, no_fuse,
     if fuse_relu and k < len(layers) and layers[k].kind == "relu":
         pool_relu = True
         names.append(layers[k].name)
+        k += 1
+    lrn = None
+    if (k < len(layers) and layers[k].kind == "lrn"
+            and layers[k].name not in no_fuse):
+        lrn = layers[k]
+        names.append(lrn.name)
+    # VMEM working-set check (Pallas path only): the fused kernel shrinks
+    # its pooled band to fit, but never below one pool window of conv
+    # rows — when even that floor cell busts the budget, decline (first
+    # retrying without the LRN tail, whose full-width oc tile is the
+    # widest working set)
+    if vmem_check and not _fits_vmem(conv, pool, method, cin, w_in,
+                                     lrn is not None, vmem_budget):
+        if lrn is not None and _fits_vmem(conv, pool, method, cin, w_in,
+                                          False, vmem_budget):
+            names.pop()
+            lrn = None
+        else:
+            return None
     return FusedLayerSpec(conv=conv, pool=pool, relu=relu,
-                          pool_relu=pool_relu, names=tuple(names))
+                          pool_relu=pool_relu, names=tuple(names), lrn=lrn)
+
+
+def _fits_vmem(conv, pool, method, cin, w_in, with_lrn, vmem_budget) -> bool:
+    from repro.kernels.conv2d import kernels as K
+
+    budget = K.VMEM_BUDGET_BYTES if vmem_budget is None else vmem_budget
+    # unknown method (method_for=None): charge the widest cell any
+    # fusable method would stage — basic_simd's full-width oc terms and
+    # the advanced kernels' im2col staging dominate different regimes
+    methods = ((method,) if method is not None
+               else (Method.BASIC_SIMD, Method.ADVANCED_SIMD_8))
+    return max(fused_working_set(conv, pool, m, cin, w_in, lrn=with_lrn)
+               for m in methods) <= budget
 
 
 def fusion_summary(plan: Iterable[PlanItem]) -> List[Tuple[str, ...]]:

@@ -252,15 +252,19 @@ def conv2d_pool_fused(x, w, b, method: "Method", stride=(1, 1),
                       padding=(0, 0), relu=False, pool_kernel=(2, 2),
                       pool_stride=(2, 2), pool_kind: str = "max",
                       pool_relu: bool = False, use_pallas=False,
-                      oh_block=None):
-    """One-dispatch conv→[ReLU]→pool→[ReLU] (a ``FusedLayerSpec``).
+                      oh_block=None, lrn_n=None, lrn_alpha: float = 1e-4,
+                      lrn_beta: float = 0.75, lrn_k: float = 1.0):
+    """One-dispatch conv→[ReLU]→pool→[ReLU]→[LRN] (a ``FusedLayerSpec``).
 
     SIMD methods only — the planner falls back to the per-layer ladder for
     ``seq_ref``/``basic_parallel``.  On the Pallas path the conv kernel
-    pools its oh-band in VMEM and writes only the pooled activation; the
-    XLA analogue runs the whole group in one NHWC pass (im2col matmul at
-    full output-channel width + ``reduce_window``) with a single layout
-    round-trip instead of one per layer.
+    pools (and, with ``lrn_n``, channel-normalizes) its oh-band in VMEM
+    and writes only the final activation; the XLA analogue runs the whole
+    group in one NHWC pass (im2col matmul at full output-channel width +
+    ``reduce_window`` pooling + channel-axis LRN on the NHWC minor axis)
+    with a single layout round-trip instead of one per layer.  LRN
+    matches ``engine._lrn`` exactly, including the asymmetric window
+    padding for even ``lrn_n``.
     """
     if method == Method.BASIC_SIMD:
         pallas_method = "basic_simd"
@@ -275,7 +279,9 @@ def conv2d_pool_fused(x, w, b, method: "Method", stride=(1, 1),
                                method=pallas_method, oh_block=oh_block,
                                pool_kernel=pool_kernel,
                                pool_stride=pool_stride, pool_kind=pool_kind,
-                               pool_relu=pool_relu)
+                               pool_relu=pool_relu, lrn_n=lrn_n,
+                               lrn_alpha=lrn_alpha, lrn_beta=lrn_beta,
+                               lrn_k=lrn_k)
     xh = nchw_to_nhwc(x)  # one layout round-trip for the whole group
     wh = oihw_to_hwio(w)
     n, h, wd, c = xh.shape
@@ -309,6 +315,13 @@ def conv2d_pool_fused(x, w, b, method: "Method", stride=(1, 1),
         raise ValueError(pool_kind)
     if pool_relu:
         out = jnp.maximum(out, 0.0)
+    if lrn_n is not None:
+        # channel-axis LRN while channels are still the NHWC minor axis —
+        # the SAME lrn_band the Pallas epilogue runs (engine._lrn
+        # semantics: asymmetric padding keeps C channels for even n)
+        from repro.kernels.conv2d.kernels import lrn_band
+
+        out = lrn_band(out, lrn_n, lrn_alpha, lrn_beta, lrn_k)
     return nhwc_to_nchw(out.astype(x.dtype))
 
 

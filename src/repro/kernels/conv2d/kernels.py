@@ -41,6 +41,25 @@ the pool stride and widened by the pool-window halo — applies bias+ReLU,
 pools it in VMEM (``pool2d.kernels.pool_band``), and writes only the
 pooled band.  The intermediate conv activation never touches HBM: one
 dispatch, one HBM write, for what the per-layer ladder did in two passes.
+
+Fused LRN epilogue (one stage further): an optional
+``lrn=(n, alpha, beta, k)`` extends the fused cell to
+conv→bias→ReLU→pool→LRN.  The channel-axis sum-of-squares runs over the
+in-VMEM pooled band (fp32, ``lrn_band``) with the same asymmetric window
+padding as ``engine._lrn`` — window ``[c - n//2, c + (n-1)//2]``, so even
+``n`` stays C-channels-in/C-channels-out — and only the *normalized* band
+is written.  AlexNet's two ``conv→relu→pool→norm`` runs become single
+dispatches.  LRN needs every output channel of a pooled row in one cell,
+so the advanced kernel drops its oc-grid blocking to one full-width tile
+when ``lrn`` is set (the working-set model below charges for it).
+
+``fused_cell_bytes`` is the shared VMEM working-set model for one fused
+grid cell (halo-widened input band + patch staging + weights + conv band
++ pooled band); ``auto_ph_block`` walks it to pick the largest pooled
+band that fits the budget, and the fusion planner
+(``repro.core.fusion``) evaluates the same model at the one-pool-window
+floor to decline fusion for shapes whose smallest possible cell would
+still bust the budget.
 """
 from __future__ import annotations
 
@@ -101,6 +120,66 @@ def resolve_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block, oh_block,
         return auto_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block,
                              im2col=im2col)
     return max(1, min(oh_block, oh))
+
+
+def fused_cell_bytes(phb, ow, wp, c, kh, kw, sy, oc_block, pool,
+                     im2col: bool = True, itemsize: int = 4) -> int:
+    """Modelled VMEM working set of ONE fused conv→pool(→LRN) grid cell.
+
+    ``phb`` pooled rows ⇒ ``(phb-1)*psy + pkh`` conv rows ⇒
+    ``(cband-1)*sy + kh`` input rows (halo included).  Charged terms, all
+    fp32 staging: the halo-widened input band, the patch staging (full
+    im2col matrix for the advanced kernel, one [rows, C] slice for the
+    basic kernel), one weight block, the conv-band accumulator, and the
+    pooled output band.  The same model backs both the kernel-side
+    ``auto_ph_block`` walk and the planner's decline-to-fuse check, so
+    the planner never forms a group the kernel cannot stage.
+    """
+    pkh, pkw, psy, psx = pool
+    pw = (ow - pkw) // psx + 1
+    cband = (phb - 1) * psy + pkh          # conv rows per cell
+    band = (cband - 1) * sy + kh           # input rows per cell (halo incl.)
+    patch_c = kh * kw * c if im2col else c
+    return (band * wp * c                  # halo-widened input band
+            + cband * ow * patch_c        # patch staging
+            + kh * kw * c * oc_block      # weight block
+            + cband * ow * oc_block       # conv band accumulator
+            + phb * pw * oc_block         # pooled (normalized) output band
+            ) * itemsize
+
+
+def auto_ph_block(ph, ow, wp, c, kh, kw, sy, oc_block, pool,
+                  budget: int = VMEM_BUDGET_BYTES,
+                  im2col: bool = True) -> int:
+    """Largest pooled-row band whose fused-cell working set fits
+    ``budget``; floors at one pooled row (one pool window of conv rows —
+    which may exceed the soft budget: the planner's job is to keep such
+    shapes un-fused in the first place)."""
+    candidates = [ph] + [b for b in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1)
+                         if b < ph]
+    for phb in candidates:
+        if fused_cell_bytes(phb, ow, wp, c, kh, kw, sy, oc_block, pool,
+                            im2col=im2col) <= budget:
+            return phb
+    return 1
+
+
+def lrn_band(x, n, alpha, beta, k):
+    """AlexNet-style LRN over the channel (minor) axis of an fp32 band.
+
+    Window ``[c - n//2, c + (n-1)//2]`` with zero padding — the same
+    asymmetric split as ``engine._lrn``, so even ``n`` keeps C channels.
+    Unrolled shifted-slice accumulation (``n`` is small and static):
+    pure VPU work on data already in VMEM.
+    """
+    c = x.shape[-1]
+    sq = x * x
+    lo, hi = n // 2, n - 1 - n // 2
+    sq_p = jnp.pad(sq, [(0, 0)] * (x.ndim - 1) + [(lo, hi)])
+    acc = jnp.zeros_like(x)
+    for i in range(n):
+        acc = acc + jax.lax.slice_in_dim(sq_p, i, i + c, axis=x.ndim - 1)
+    return x / (k + alpha * acc) ** beta
 
 
 # ---------------------------------------------------------------------------
@@ -192,20 +271,24 @@ def _plan_pool_tiles(xp, oh, ow, kh, kw, sy, oh_block, oc_block, pool,
                      im2col=True):
     """Band geometry for a fused conv+pool cell.
 
-    Resolves the conv oh-band from the VMEM budget, snaps it down to whole
-    pool windows (``ph_block`` pooled rows ⇒ ``(ph_block-1)*psy + pkh``
-    conv rows per cell), and pads the input so every band is full.
-    Returns ``(xp, ph_block, n_tiles, band, cband, ph, pw, row_step)``
-    where ``band`` is input rows per cell, ``cband`` conv rows per cell,
-    ``(ph, pw)`` the pooled output size, and ``row_step`` the input-row
-    stride between consecutive bands.
+    Resolves the pooled-row band directly from the fused-cell working-set
+    model (``auto_ph_block``; an explicit ``oh_block`` is snapped down to
+    whole pool windows: ``ph_block`` pooled rows ⇒ ``(ph_block-1)*psy +
+    pkh`` conv rows per cell), then *equalizes* the bands — ``ph_block``
+    is re-snapped to ``ceil(ph / n_tiles)`` so the last band covers its
+    fair share instead of being a ragged remainder that still fetches a
+    full band of (mostly pad) input rows.  Pads the input so every band
+    stays in bounds.  Returns ``(xp, ph_block, n_tiles, band, cband, ph,
+    pw, row_step)`` where ``band`` is input rows per cell, ``cband`` conv
+    rows per cell, ``(ph, pw)`` the pooled output size, and ``row_step``
+    the input-row stride between consecutive bands.
 
     Floor: a fused cell can never hold fewer than one pool window of conv
-    rows, so when the budget-resolved oh-band is smaller than ``pkh`` the
-    cell is widened to ``cband = pkh`` anyway — exceeding the *soft*
+    rows, so a one-pooled-row cell may exceed the *soft*
     VMEM_BUDGET_BYTES target (half of VMEM) by up to the pool-window
-    factor.  All paper shapes stay far under the hard limit; shapes that
-    would not should be kept un-fused by the planner (ROADMAP open item).
+    factor.  All paper shapes stay far under the hard limit; shapes whose
+    floor cell busts the budget are kept un-fused by the planner's
+    working-set check (``repro.core.fusion``).
     """
     pkh, pkw, psy, psx = pool
     n, hp, wp, c = xp.shape
@@ -213,12 +296,19 @@ def _plan_pool_tiles(xp, oh, ow, kh, kw, sy, oh_block, oc_block, pool,
     if ph < 1 or pw < 1:
         raise ValueError(
             f"pool window ({pkh},{pkw}) larger than conv output ({oh},{ow})")
-    ohb = resolve_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block, oh_block,
-                           im2col=im2col)
-    # snap the conv band to the pool stride: the largest pooled-row count
-    # whose conv band fits inside the resolved oh-band
-    phb = max(1, (ohb - pkh) // psy + 1) if ohb >= pkh else 1
+    if oh_block is None:
+        phb = auto_ph_block(ph, ow, wp, c, kh, kw, sy, oc_block,
+                            (pkh, pkw, psy, psx), im2col=im2col)
+    else:
+        # snap the explicit conv band to the pool stride: the largest
+        # pooled-row count whose conv band fits inside the oh-band
+        ohb = max(1, min(oh_block, oh))
+        phb = max(1, (ohb - pkh) // psy + 1) if ohb >= pkh else 1
     phb = min(phb, ph)
+    n_tiles = -(-ph // phb)
+    # equalize: same tile count, smallest per-band size — the ragged last
+    # band shrinks to its fair share and stops over-fetching pad rows
+    phb = -(-ph // n_tiles)
     n_tiles = -(-ph // phb)
     cband = (phb - 1) * psy + pkh           # conv rows per cell
     band = (cband - 1) * sy + kh            # input rows per cell (halo incl.)
@@ -229,10 +319,14 @@ def _plan_pool_tiles(xp, oh, ow, kh, kw, sy, oh_block, oc_block, pool,
     return xp, phb, n_tiles, band, cband, ph, pw, row_step
 
 
-def _pool_epilogue(acc, o_ref, pool, conv_relu):
-    """Shared epilogue: bias-added fp32 conv rows → (ReLU) → pooled band.
+def _pool_epilogue(acc, o_ref, pool, conv_relu, lrn=None):
+    """Shared epilogue: bias-added fp32 conv rows → (ReLU) → pooled band
+    → (LRN).
 
     ``acc``: [conv_rows * conv_ow, OC] fp32; writes o_ref [PH_BLK, PW, OC].
+    ``lrn=(n, alpha, beta, k)`` normalizes the pooled band across channels
+    before the (single) HBM write — the conv AND pooled activations both
+    stay VMEM-resident.
     """
     from repro.kernels.pool2d.kernels import pool_band  # deferred: no cycle
 
@@ -245,6 +339,9 @@ def _pool_epilogue(acc, o_ref, pool, conv_relu):
                     pkh, pkw, psy, psx, kind)
     if pool_relu:
         out = jnp.maximum(out, 0.0)
+    if lrn is not None:
+        n, alpha, beta, k = lrn
+        out = lrn_band(out, n, alpha, beta, k)
     o_ref[...] = out.astype(o_ref.dtype)
 
 
@@ -254,7 +351,7 @@ def _pool_epilogue(acc, o_ref, pool, conv_relu):
 
 
 def _basic_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx, relu,
-                       pool=None):
+                       pool=None, lrn=None):
     # x_ref: [1, BAND, WP, C] (input-row band); w_ref: [KH, KW, C, OC];
     # o_ref: [OH_BLK, OW, OC] (unfused) or [PH_BLK, PW, OC] (fused pool)
     if pool is None:
@@ -280,7 +377,7 @@ def _basic_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx, relu,
             )  # vectorized dot over channels (the paper's 4-wide, here 128)
     acc = acc + b_ref[...].astype(jnp.float32)
     if pool is not None:  # fused super-layer: pool in VMEM, write pooled band
-        _pool_epilogue(acc, o_ref, pool, relu)
+        _pool_epilogue(acc, o_ref, pool, relu, lrn)
         return
     if relu:
         acc = jnp.maximum(acc, 0.0)
@@ -290,13 +387,16 @@ def _basic_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx, relu,
 def conv2d_basic_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
                       relu=False, oh_block=None, interpret: bool = False,
                       pool_kernel=None, pool_stride=None,
-                      pool_kind: str = "max", pool_relu: bool = False):
+                      pool_kind: str = "max", pool_relu: bool = False,
+                      lrn=None):
     n, h, wd, c = x_nhwc.shape
     kh, kw, _, oc = w_hwio.shape
     sy, sx = stride
     py, px = padding
     xp = jnp.pad(x_nhwc, ((0, 0), (py, py), (px, px), (0, 0)))
     oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
+    if lrn is not None and pool_kernel is None:
+        raise ValueError("fused LRN epilogue requires a fused pool epilogue")
     if pool_kernel is not None:
         # fused super-layer: each cell writes a pooled band, the conv
         # activation stays in VMEM
@@ -315,7 +415,7 @@ def conv2d_basic_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
         out_rows, out_cols = ohb, ow
     wp = xp.shape[2]
     kern = functools.partial(_basic_simd_kernel, kh=kh, kw=kw, sy=sy, sx=sx,
-                             relu=relu, pool=pool)
+                             relu=relu, pool=pool, lrn=lrn)
     out = pl.pallas_call(
         kern,
         grid=(n, n_tiles),
@@ -345,7 +445,7 @@ def conv2d_basic_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
 
 
 def _advanced_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
-                          relu, pool=None):
+                          relu, pool=None, lrn=None):
     # x_ref: [1, BAND, WP, C] (input-row band); w_ref: [KH*KW*C, OC_BLK];
     # o_ref: [OH_BLK, OW, OC_BLK] (unfused) or [PH_BLK, PW, OC_BLK] (fused)
     if pool is None:
@@ -369,7 +469,7 @@ def _advanced_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
                   preferred_element_type=jnp.float32)  # one MXU matmul
     acc = acc + b_ref[...].astype(jnp.float32)
     if pool is not None:  # fused super-layer: pool in VMEM, write pooled band
-        _pool_epilogue(acc, o_ref, pool, relu)
+        _pool_epilogue(acc, o_ref, pool, relu, lrn)
         return
     if relu:  # fused epilogue in VMEM — zero-cost ReLU (Fig. 5)
         acc = jnp.maximum(acc, 0.0)
@@ -380,14 +480,19 @@ def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
                          relu=False, oc_block: int = 128, oh_block=None,
                          interpret: bool = False, pool_kernel=None,
                          pool_stride=None, pool_kind: str = "max",
-                         pool_relu: bool = False):
+                         pool_relu: bool = False, lrn=None):
     n, h, wd, c = x_nhwc.shape
     kh, kw, _, oc = w_hwio.shape
     sy, sx = stride
     py, px = padding
     xp = jnp.pad(x_nhwc, ((0, 0), (py, py), (px, px), (0, 0)))
     oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
-    ocb = min(oc_block, oc)
+    if lrn is not None and pool_kernel is None:
+        raise ValueError("fused LRN epilogue requires a fused pool epilogue")
+    # LRN reaches across ALL output channels of a pooled row, so the oc
+    # grid collapses to one full-width tile when the epilogue is fused
+    # (the planner's working-set check charges the full-width weights)
+    ocb = oc if lrn is not None else min(oc_block, oc)
     pad_oc = (-oc) % ocb
     wmat = w_hwio.reshape(kh * kw * c, oc)
     if pad_oc:
@@ -411,7 +516,7 @@ def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
         out_rows, out_cols = ohb, ow
     wp = xp.shape[2]
     kern = functools.partial(_advanced_simd_kernel, kh=kh, kw=kw, sy=sy,
-                             sx=sx, relu=relu, pool=pool)
+                             sx=sx, relu=relu, pool=pool, lrn=lrn)
     out = pl.pallas_call(
         kern,
         grid=(n, n_tiles, ocp // ocb),

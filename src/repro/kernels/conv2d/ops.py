@@ -36,25 +36,35 @@ def _on_tpu() -> bool:
 
 @partial(jax.jit, static_argnames=("stride", "padding", "relu", "method",
                                    "oh_block", "interpret", "pool_kernel",
-                                   "pool_stride", "pool_kind", "pool_relu"))
+                                   "pool_stride", "pool_kind", "pool_relu",
+                                   "lrn_n", "lrn_alpha", "lrn_beta", "lrn_k"))
 def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
            method: str = "advanced_simd_128", oh_block: int = None,
            interpret: bool = None, pool_kernel=None, pool_stride=None,
-           pool_kind: str = "max", pool_relu: bool = False):
+           pool_kind: str = "max", pool_relu: bool = False,
+           lrn_n: int = None, lrn_alpha: float = 1e-4,
+           lrn_beta: float = 0.75, lrn_k: float = 1.0):
     """x: [N, C, H, W]; w: [OC, C, KH, KW]; b: [OC].
 
     ``pool_kernel``/``pool_stride`` (SIMD methods only) fuse a VALID
     max/avg pooling epilogue into the conv kernel — the super-layer path:
     the conv activation never leaves VMEM and only the pooled band is
     written.  ``relu`` applies between conv and pool, ``pool_relu`` after
-    the pool.
+    the pool.  ``lrn_n`` (requires ``pool_kernel``) extends the epilogue
+    with channel-axis LRN over the in-VMEM pooled band
+    (``engine._lrn`` semantics, asymmetric padding for even ``lrn_n``) so
+    only the *normalized* band is written — AlexNet's conv→relu→pool→norm
+    in one dispatch.
     """
     interp = (not _on_tpu()) if interpret is None else interpret
     if method == "basic_parallel":
-        if pool_kernel is not None:
+        if pool_kernel is not None or lrn_n is not None:
             raise ValueError("fused pooling epilogue requires a SIMD method")
         return K.conv2d_basic_parallel(x, w, b, stride, padding, relu,
                                        interpret=interp)
+    if lrn_n is not None and pool_kernel is None:
+        raise ValueError("fused LRN epilogue requires a fused pool epilogue")
+    lrn = (lrn_n, lrn_alpha, lrn_beta, lrn_k) if lrn_n is not None else None
     # SIMD methods: dimension swapping + channel padding (§4.3)
     xh = nchw_to_nhwc(x)
     wh = oihw_to_hwio(w)
@@ -65,7 +75,8 @@ def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
                                   oh_block=oh_block, interpret=interp,
                                   pool_kernel=pool_kernel,
                                   pool_stride=pool_stride,
-                                  pool_kind=pool_kind, pool_relu=pool_relu)
+                                  pool_kind=pool_kind, pool_relu=pool_relu,
+                                  lrn=lrn)
     elif method.startswith("advanced_simd"):
         blk = int(method.rsplit("_", 1)[1]) if method[-1].isdigit() else 128
         out = K.conv2d_advanced_simd(xh, wh, b, stride, padding, relu,
@@ -74,7 +85,7 @@ def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
                                      pool_kernel=pool_kernel,
                                      pool_stride=pool_stride,
                                      pool_kind=pool_kind,
-                                     pool_relu=pool_relu)
+                                     pool_relu=pool_relu, lrn=lrn)
     else:
         raise ValueError(method)
     return nhwc_to_nchw(out)

@@ -1,0 +1,115 @@
+"""Unit tests for the CI bench-trend gate (``tools/bench_compare.py``)."""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_TOOL = pathlib.Path(__file__).resolve().parent.parent / "tools" / \
+    "bench_compare.py"
+_spec = importlib.util.spec_from_file_location("bench_compare", _TOOL)
+bench_compare = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_compare)
+
+
+def _bench(rows_by_net):
+    """{'net': {'method': {'unfused': us, 'fused': us}}} -> bench JSON."""
+    return {
+        "bench": "network_ladder",
+        "networks": {
+            net: {"rows": [
+                {"method": m,
+                 **{variant: {"us_per_call": us, "fps": 1.0}
+                    for variant, us in variants.items()}}
+                for m, variants in methods.items()
+            ]}
+            for net, methods in rows_by_net.items()
+        },
+    }
+
+
+PREV = _bench({
+    "lenet5": {"basic_simd": {"unfused": 1000.0, "fused": 800.0}},
+    "cifar10": {"advanced_simd_8": {"unfused": 5000.0}},
+})
+
+
+def _by_key(rows):
+    return {(r["network"], r["method"], r["variant"]): r for r in rows}
+
+
+def test_regression_detected():
+    cur = _bench({
+        "lenet5": {"basic_simd": {"unfused": 1000.0, "fused": 1100.0}},
+        "cifar10": {"advanced_simd_8": {"unfused": 5000.0}},
+    })
+    rows = bench_compare.compare(bench_compare.flatten(PREV),
+                                 bench_compare.flatten(cur),
+                                 max_regress_pct=25.0)
+    by = _by_key(rows)
+    assert by[("lenet5", "basic_simd", "fused")]["status"] == "regressed"
+    assert by[("lenet5", "basic_simd", "fused")]["delta_pct"] == \
+        pytest.approx(37.5)
+    assert by[("lenet5", "basic_simd", "unfused")]["status"] == "ok"
+    assert by[("cifar10", "advanced_simd_8", "unfused")]["status"] == "ok"
+
+
+def test_within_tolerance_and_speedup_are_ok():
+    cur = _bench({
+        "lenet5": {"basic_simd": {"unfused": 1200.0,   # +20% < 25%
+                                  "fused": 400.0}},    # faster
+        "cifar10": {"advanced_simd_8": {"unfused": 5000.0}},
+    })
+    rows = bench_compare.compare(bench_compare.flatten(PREV),
+                                 bench_compare.flatten(cur), 25.0)
+    assert all(r["status"] == "ok" for r in rows)
+
+
+def test_new_and_removed_rows_never_gate():
+    cur = _bench({
+        "lenet5": {"basic_simd": {"unfused": 1000.0, "fused": 800.0}},
+        "alexnet": {"advanced_simd_8": {"unfused": 9000.0,
+                                        "fused": 7000.0}},
+    })
+    rows = bench_compare.compare(bench_compare.flatten(PREV),
+                                 bench_compare.flatten(cur), 25.0)
+    by = _by_key(rows)
+    assert by[("alexnet", "advanced_simd_8", "fused")]["status"] == "new"
+    assert by[("cifar10", "advanced_simd_8", "unfused")]["status"] == \
+        "removed"
+    assert not any(r["status"] == "regressed" for r in rows)
+
+
+def test_main_exit_codes_and_table(tmp_path, capsys):
+    prev_p, cur_p = tmp_path / "prev.json", tmp_path / "cur.json"
+    prev_p.write_text(json.dumps(PREV))
+    cur_p.write_text(json.dumps(_bench({
+        "lenet5": {"basic_simd": {"unfused": 2000.0, "fused": 800.0}},
+        "cifar10": {"advanced_simd_8": {"unfused": 5000.0}},
+    })))
+    # warn-only (PR mode): regression reported, exit 0
+    assert bench_compare.main([str(prev_p), str(cur_p)]) == 0
+    out = capsys.readouterr().out
+    assert "| lenet5 | basic_simd | unfused |" in out
+    assert "regressed" in out and "+100.0%" in out
+    # gate mode (main): same comparison exits 1
+    assert bench_compare.main([str(prev_p), str(cur_p),
+                               "--fail-on-regress"]) == 1
+    # wider tolerance passes the gate
+    assert bench_compare.main([str(prev_p), str(cur_p), "--fail-on-regress",
+                               "--max-regress-pct", "150"]) == 0
+
+
+def test_config_change_resets_baseline(tmp_path, capsys):
+    """Different batch/iters/backend make us_per_call incomparable: the
+    baseline resets (all rows 'new') instead of gating apples-to-oranges."""
+    prev_p, cur_p = tmp_path / "prev.json", tmp_path / "cur.json"
+    prev_p.write_text(json.dumps({**PREV, "batch": 8}))
+    slower = _bench({"lenet5": {"basic_simd": {"unfused": 9000.0,
+                                               "fused": 9000.0}}})
+    cur_p.write_text(json.dumps({**slower, "batch": 16}))
+    assert bench_compare.main([str(prev_p), str(cur_p),
+                               "--fail-on-regress"]) == 0
+    out = capsys.readouterr().out
+    assert "bench config changed" in out and "batch: 8 → 16" in out
+    assert "regressed" not in out and "🆕 new" in out

@@ -29,7 +29,7 @@ SIMD = Method.ADVANCED_SIMD_8
     ("lenet5", [("conv1", "pool1"), ("conv2", "pool2")]),
     ("cifar10", [("conv1", "pool1"), ("conv2", "pool2"),
                  ("conv3", "pool3")]),
-    ("alexnet", [("conv1", "pool1"), ("conv2", "pool2"),
+    ("alexnet", [("conv1", "pool1", "norm1"), ("conv2", "pool2", "norm2"),
                  ("conv5", "pool5")]),
 ])
 def test_planner_groups(net_name, expected):
@@ -43,7 +43,7 @@ def test_planner_preserves_ungrouped_layers():
     kinds = [it.kind for it in plan]
     # conv3/conv4 have no following pool: they stay per-layer
     assert kinds.count("conv") == 2 and kinds.count("fused") == 3
-    assert kinds.count("lrn") == 2  # LRN never fuses
+    assert kinds.count("lrn") == 0  # both pool→norm tails absorbed
     # every original layer is accounted for exactly once
     covered = [n for it in plan
                for n in (it.names if isinstance(it, FusedLayerSpec)
@@ -102,6 +102,55 @@ def test_planner_unsupported_shapes_fall_back():
     assert fusion_summary(plan_fusion(net2, method_for=lambda n: SIMD)) == []
 
 
+def test_planner_lrn_opt_out_keeps_pool_fusion():
+    plan = plan_fusion(NETWORKS["alexnet"](), method_for=lambda n: SIMD,
+                       no_fuse={"norm1"})
+    groups = fusion_summary(plan)
+    # the opted-out LRN drops out of the group; conv1+pool1 still fuse
+    assert ("conv1", "pool1") in groups
+    assert ("conv2", "pool2", "norm2") in groups
+
+
+def test_planner_declines_over_budget_shape():
+    """The floor fused cell (ONE pool window of conv rows) of this shape
+    stages an im2col matrix far past the soft VMEM budget — the planner
+    must keep the pair un-fused instead of compiling a cell that can't
+    fit."""
+    net = NetworkDef("t", (512, 16, 2048), 4, (
+        LayerSpec("conv", "c", out_channels=512, kernel=(3, 3),
+                  padding=(1, 1), relu=True),
+        LayerSpec("pool", "p", kernel=(3, 3), stride=(2, 2)),
+    ))
+    assert fusion_summary(plan_fusion(net, method_for=lambda n: SIMD)) == []
+    # a generous budget override restores the group: the working-set
+    # check (not any shape rule) is what declined
+    assert fusion_summary(plan_fusion(
+        net, method_for=lambda n: SIMD,
+        vmem_budget=1 << 40)) == [("c", "p")]
+    # the XLA analogue has no VMEM ceiling: vmem_check=False (what the
+    # engine passes for use_pallas=False) fuses the same shape
+    assert fusion_summary(plan_fusion(
+        net, method_for=lambda n: SIMD,
+        vmem_check=False)) == [("c", "p")]
+
+
+def test_planner_drops_lrn_tail_before_declining():
+    """The full-width oc tile the LRN epilogue needs busts the budget for
+    a 4096-channel conv, but the oc-blocked conv+pool floor cell fits:
+    only the LRN tail is dropped from the group."""
+    net = NetworkDef("t", (64, 16, 128), 4, (
+        LayerSpec("conv", "c", out_channels=4096, kernel=(3, 3),
+                  padding=(1, 1), relu=True),
+        LayerSpec("pool", "p", kernel=(3, 3), stride=(2, 2)),
+        LayerSpec("lrn", "n"),
+    ))
+    assert fusion_summary(plan_fusion(
+        net, method_for=lambda n: SIMD)) == [("c", "p")]
+    assert fusion_summary(plan_fusion(
+        net, method_for=lambda n: SIMD,
+        vmem_budget=1 << 40)) == [("c", "p", "n")]
+
+
 # ---------------------------------------------------------------------------
 # fused Pallas kernels vs the per-layer reference (interpret mode)
 # ---------------------------------------------------------------------------
@@ -153,6 +202,57 @@ def test_fused_rejects_basic_parallel():
                       pool_kernel=(2, 2), pool_stride=(2, 2))
     with pytest.raises(ValueError, match="SIMD"):
         conv2d_pool_fused(x, w, b, Method.SEQ_REF)
+
+
+# ---------------------------------------------------------------------------
+# fused LRN epilogue (conv→ReLU→pool→LRN in one cell)
+# ---------------------------------------------------------------------------
+
+_LRN = dict(lrn_alpha=2e-2, lrn_beta=0.75, lrn_k=2.0)
+
+
+def _lrn_ref(x, lrn_n):
+    return _lrn(x, LayerSpec("lrn", "n", lrn_n=lrn_n, **_LRN))
+
+
+@pytest.mark.parametrize("method", ["basic_simd", "advanced_simd_128"])
+@pytest.mark.parametrize("lrn_n", [4, 5])  # even n: asymmetric padding
+def test_fused_lrn_kernel_matches_per_layer(method, lrn_n):
+    """conv→relu→pool→LRN in one Pallas cell vs the per-layer reference
+    chain, including `engine._lrn`'s even-n asymmetric window padding."""
+    x, w, b = _case(2, 5, 20, 18, 7, 5)
+    ref = _lrn_ref(pool2d_ref(conv2d_ref(x, w, b, (1, 1), (2, 2), relu=True),
+                              (3, 3), (2, 2), "max"), lrn_n)
+    out = conv2d_pallas(x, w, b, (1, 1), (2, 2), relu=True, method=method,
+                        interpret=True, pool_kernel=(3, 3),
+                        pool_stride=(2, 2), pool_kind="max", lrn_n=lrn_n,
+                        **_LRN)
+    assert out.shape == ref.shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+@pytest.mark.parametrize("method", ["basic_simd", "advanced_simd_128"])
+def test_fused_lrn_multi_tile(method):
+    """A tiny oh_block forces several pooled bands per frame; LRN is
+    per-pooled-row so banding must not change it."""
+    x, w, b = _case(1, 4, 33, 21, 6, 3)
+    ref = _lrn_ref(pool2d_ref(conv2d_ref(x, w, b, (1, 1), (1, 1),
+                                         relu=True), (3, 3), (2, 2), "max"),
+                   5)
+    out = conv2d_pallas(x, w, b, (1, 1), (1, 1), relu=True, method=method,
+                        interpret=True, oh_block=5, pool_kernel=(3, 3),
+                        pool_stride=(2, 2), pool_kind="max", lrn_n=5, **_LRN)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+def test_fused_lrn_requires_pool():
+    x, w, b = _case(1, 3, 8, 8, 4, 3)
+    with pytest.raises(ValueError, match="pool"):
+        conv2d_pallas(x, w, b, method="advanced_simd_128", interpret=True,
+                      lrn_n=5)
+    with pytest.raises(ValueError, match="SIMD"):
+        conv2d_pallas(x, w, b, method="basic_parallel", interpret=True,
+                      lrn_n=5)
 
 
 # ---------------------------------------------------------------------------

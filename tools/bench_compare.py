@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""Bench-trend comparison for ``BENCH_network.json`` artifacts.
+
+Diffs two network-ladder bench files (previous vs current), per network,
+per method, per variant (unfused/fused), on ``us_per_call``.  Prints a
+markdown trend table (CI pipes it into ``$GITHUB_STEP_SUMMARY``) and —
+with ``--fail-on-regress`` — exits non-zero when any row slows down by
+more than ``--max-regress-pct`` percent.  Rows present on only one side
+are reported as ``new``/``removed`` and never fail the gate (a fresh
+network or method is a feature, not a regression).  When the two files
+were produced with different bench configs (``batch``/``iters``/
+``backend``), their us_per_call are not comparable: the previous file is
+discarded, every current row reports as ``new``, and the gate passes —
+a deliberate config change resets the baseline instead of tripping (or
+masking) the regression check.
+
+Usage:
+    python tools/bench_compare.py prev/BENCH_network.json BENCH_network.json \
+        --max-regress-pct 25 [--fail-on-regress]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+#: (network, method, variant) -> us_per_call
+FlatBench = Dict[Tuple[str, str, str], float]
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+#: bench-config keys that must match for us_per_call to be comparable
+CONFIG_KEYS = ("batch", "iters", "backend")
+
+
+def config_mismatch(prev: dict, cur: dict) -> List[str]:
+    """The CONFIG_KEYS on which the two bench files disagree."""
+    return [k for k in CONFIG_KEYS if prev.get(k) != cur.get(k)]
+
+
+def flatten(data: dict) -> FlatBench:
+    """``BENCH_network.json`` -> {(network, method, variant): us_per_call}."""
+    flat: FlatBench = {}
+    for net, nd in data.get("networks", {}).items():
+        for row in nd.get("rows", []):
+            for variant in ("unfused", "fused"):
+                if variant in row:
+                    flat[(net, row["method"], variant)] = (
+                        row[variant]["us_per_call"])
+    return flat
+
+
+def compare(prev: FlatBench, cur: FlatBench,
+            max_regress_pct: float) -> List[dict]:
+    """Per-row trend verdicts, sorted by (network, method, variant).
+
+    status: ``ok`` (within tolerance, or faster), ``regressed`` (slower
+    by more than ``max_regress_pct``), ``new`` (row only in current),
+    ``removed`` (row only in previous).
+    """
+    rows = []
+    for key in sorted(set(prev) | set(cur)):
+        net, method, variant = key
+        row = {"network": net, "method": method, "variant": variant,
+               "prev_us": prev.get(key), "cur_us": cur.get(key),
+               "delta_pct": None}
+        if key not in prev:
+            row["status"] = "new"
+        elif key not in cur:
+            row["status"] = "removed"
+        else:
+            row["delta_pct"] = 100.0 * (cur[key] - prev[key]) / prev[key]
+            row["status"] = ("regressed"
+                             if row["delta_pct"] > max_regress_pct else "ok")
+        rows.append(row)
+    return rows
+
+
+def render_markdown(rows: List[dict], max_regress_pct: float,
+                    note: str = "") -> str:
+    """The trend table CI posts to the job summary."""
+    n_reg = sum(r["status"] == "regressed" for r in rows)
+    lines = [
+        "## Bench trend (us_per_call vs previous main)",
+        "",
+        f"Tolerance: +{max_regress_pct:g}% — "
+        + (f"**{n_reg} regression(s)**" if n_reg else "no regressions"),
+        *(["", note] if note else []),
+        "",
+        "| network | method | variant | prev us | cur us | Δ% | status |",
+        "|---|---|---|---:|---:|---:|---|",
+    ]
+    icon = {"ok": "✅", "regressed": "🔺", "new": "🆕", "removed": "➖"}
+    for r in rows:
+        prev = f"{r['prev_us']:.0f}" if r["prev_us"] is not None else "—"
+        cur = f"{r['cur_us']:.0f}" if r["cur_us"] is not None else "—"
+        delta = (f"{r['delta_pct']:+.1f}%" if r["delta_pct"] is not None
+                 else "—")
+        lines.append(f"| {r['network']} | {r['method']} | {r['variant']} | "
+                     f"{prev} | {cur} | {delta} | "
+                     f"{icon[r['status']]} {r['status']} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("prev", help="previous BENCH_network.json")
+    ap.add_argument("cur", help="current BENCH_network.json")
+    ap.add_argument("--max-regress-pct", type=float, default=25.0,
+                    help="allowed us_per_call growth per row (default 25)")
+    ap.add_argument("--fail-on-regress", action="store_true",
+                    help="exit 1 when any row regresses past the tolerance "
+                         "(CI: set on main, leave off on PRs)")
+    args = ap.parse_args(argv)
+    prev, cur = load(args.prev), load(args.cur)
+    note = ""
+    mismatch = config_mismatch(prev, cur)
+    if mismatch:
+        # different bench config: us_per_call not comparable — reset the
+        # baseline (all rows "new") rather than gate on apples-to-oranges
+        note = ("⚠️ bench config changed ("
+                + ", ".join(f"{k}: {prev.get(k)} → {cur.get(k)}"
+                            for k in mismatch)
+                + ") — baseline reset, no comparison performed")
+        prev = {}
+    rows = compare(flatten(prev), flatten(cur), args.max_regress_pct)
+    print(render_markdown(rows, args.max_regress_pct, note))
+    regressed = [r for r in rows if r["status"] == "regressed"]
+    for r in regressed:
+        print(f"::warning::bench regression: {r['network']}/{r['method']}"
+              f"/{r['variant']} {r['prev_us']:.0f} -> {r['cur_us']:.0f} us "
+              f"({r['delta_pct']:+.1f}% > +{args.max_regress_pct:g}%)",
+              file=sys.stderr)
+    return 1 if (regressed and args.fail_on_regress) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -89,7 +89,11 @@ def run_json(nets=("lenet5", "cifar10"), batch=BATCH, iters=3,
                     "share identical conv math with unfused and isolate "
                     "the fusion win itself; fused_groups ending in a "
                     "norm layer run the conv->relu->pool->LRN tail as "
-                    "one dispatch (PR 3 LRN epilogue)")}
+                    "one dispatch (PR 3 LRN epilogue); fused_groups with "
+                    "several convs run the whole chain as one dispatch "
+                    "(PR 4 VMEM-resident halo) — fused_geometry records "
+                    "each group's depth and the band a Pallas cell "
+                    "resolves")}
     for name in nets:
         net = NETWORKS[name]()
         eng0 = CNNEngine(net, method=Method.SEQ_REF)
@@ -112,6 +116,9 @@ def run_json(nets=("lenet5", "cifar10"), batch=BATCH, iters=3,
                                 "fps": batch / (us_f / 1e6)}
                 row["fused_speedup"] = us / us_f
                 row["fused_groups"] = ["+".join(g) for g in groups]
+                # executed chain geometry (group depth + the band the
+                # Pallas cell resolves) — carried into the CI trend table
+                row["fused_geometry"] = eng.fusion_report()
             rows.append(row)
         out["networks"][name] = {"rows": rows,
                                  "input_shape": list(net.input_shape)}

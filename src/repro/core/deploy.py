@@ -86,6 +86,12 @@ def load_model(path) -> Tuple[NetworkDef, dict, dict]:
     for k, meta in manifest["tensors"].items():
         if list(flat[k].shape) != meta["shape"]:
             raise ValueError(f"tensor {k} shape mismatch")
+        if str(flat[k].dtype) != meta["dtype"]:
+            # a dtype-corrupted artifact (e.g. re-saved at lower precision
+            # with a refreshed checksum) must not load silently
+            raise ValueError(
+                f"tensor {k} dtype mismatch: manifest records "
+                f"{meta['dtype']}, weights.npz holds {flat[k].dtype}")
     nd = manifest["network"]
     net = NetworkDef(
         name=nd["name"],

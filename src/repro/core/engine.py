@@ -6,12 +6,14 @@ The engine owns:
 * the forward executor with the execution-method ladder for conv/FC layers,
 * fused-activation scheduling (ReLU folded into the producing layer —
   the TPU-native realization of the paper's Fig. 5 CPU/GPU overlap),
-* super-layer fusion: ``repro.core.fusion.plan_fusion`` groups
-  conv[+relu][+pool][+lrn] runs into single dispatches (``fuse_pool``, on
-  by default, with per-layer opt-outs via ``per_layer_fuse``) so neither
-  the conv activation nor — for AlexNet's pool→norm tails — the pooled
-  activation ever round-trips through HBM; a VMEM working-set check keeps
-  shapes whose floor cell cannot fit the budget on the per-layer ladder,
+* super-layer fusion: ``repro.core.fusion.plan_fusion`` groups runs of
+  consecutive convs plus an optional pool/LRN tail into single dispatches
+  (``fuse_pool``, on by default, with per-layer opt-outs via
+  ``per_layer_fuse``) so no intermediate of the run — conv chain bands,
+  the pooled band under an absorbed LRN — ever round-trips through HBM
+  (AlexNet's conv3→conv4→conv5+pool5 is one dispatch); a VMEM
+  working-set check keeps shapes whose floor cell cannot fit the budget
+  on the per-layer ladder, falling back to shorter chains first,
 * per-layer instrumentation used by the benchmark harness (``collect``
   forces the un-fused per-layer path so every activation is observable).
 
@@ -30,10 +32,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fusion import FusedLayerSpec, plan_fusion
+from repro.core.fusion import FusedLayerSpec, layers_as_chain, plan_fusion
 from repro.core.methods import (
     Method,
     conv2d,
+    conv2d_chain_fused,
     conv2d_pool_fused,
     fc_fused,
     fc_seq_ref,
@@ -129,7 +132,11 @@ class CNNEngine:
             elif spec.kind == "flatten":
                 flat = c * h * w
             elif spec.kind == "fc":
-                d_in = flat if flat is not None else c
+                # an fc straight after a conv/pool (no flatten layer)
+                # consumes the WHOLE activation — c*h*w, not just the
+                # channel count (which silently dropped the spatial
+                # extent); forward() flattens implicitly to match
+                d_in = flat if flat is not None else c * h * w
                 shapes[spec.name] = (d_in, spec.out_channels)
                 flat = spec.out_channels
         return shapes
@@ -194,20 +201,44 @@ class CNNEngine:
         while i < len(items):
             spec = items[i]
             if isinstance(spec, FusedLayerSpec):
-                # super-layer: one dispatch, conv (and, with an absorbed
-                # LRN, pooled) activation never lands
-                p = params[spec.conv.name]
+                # super-layer: one dispatch; no intermediate of the run
+                # (conv chain bands, pooled band under an absorbed LRN)
+                # ever lands in HBM
                 lrn = spec.lrn
-                x = conv2d_pool_fused(
-                    x, p["w"], p["b"], self._method_for(spec.conv.name),
-                    spec.conv.stride, spec.conv.padding, spec.relu,
-                    spec.pool.kernel, spec.pool.stride, spec.pool.pool_kind,
-                    spec.pool_relu, self.use_pallas,
-                    self._oh_block_for(spec.conv.name),
+                lrn_kw = dict(
                     lrn_n=lrn.lrn_n if lrn is not None else None,
                     lrn_alpha=lrn.lrn_alpha if lrn is not None else 1e-4,
                     lrn_beta=lrn.lrn_beta if lrn is not None else 0.75,
                     lrn_k=lrn.lrn_k if lrn is not None else 1.0)
+                method = self._method_for(spec.conv.name)
+                # a chain cell's band is defined in FINAL-stage rows, so
+                # the last conv's oh_block override is the one that maps
+                # onto it (overrides on earlier chain members have no
+                # per-stage band to bind to)
+                ohb = self._oh_block_for(spec.convs[-1].name)
+                if len(spec.convs) == 1:
+                    # single conv + pool: the oc-blocked epilogue kernel
+                    p = params[spec.conv.name]
+                    x = conv2d_pool_fused(
+                        x, p["w"], p["b"], method, spec.conv.stride,
+                        spec.conv.padding, spec.relu, spec.pool.kernel,
+                        spec.pool.stride, spec.pool.pool_kind,
+                        spec.pool_relu, self.use_pallas, ohb, **lrn_kw)
+                else:
+                    # conv chain (optional pool/LRN tail): the full-width
+                    # chain cell, VMEM-resident halo between stages
+                    pool = spec.pool
+                    x = conv2d_chain_fused(
+                        x, tuple(params[cv.name]["w"] for cv in spec.convs),
+                        tuple(params[cv.name]["b"] for cv in spec.convs),
+                        method, tuple(cv.stride for cv in spec.convs),
+                        tuple(cv.padding for cv in spec.convs), spec.relus,
+                        pool_kernel=pool.kernel if pool is not None else None,
+                        pool_stride=pool.stride if pool is not None else None,
+                        pool_kind=(pool.pool_kind if pool is not None
+                                   else "max"),
+                        pool_relu=spec.pool_relu,
+                        use_pallas=self.use_pallas, oh_block=ohb, **lrn_kw)
                 i += 1
                 continue
             # fused-activation scheduling: a standalone relu following a
@@ -229,6 +260,8 @@ class CNNEngine:
             elif spec.kind == "flatten":
                 x = x.reshape(x.shape[0], -1)
             elif spec.kind == "fc":
+                if x.ndim > 2:  # fc after conv/pool without a flatten
+                    x = x.reshape(x.shape[0], -1)
                 p = params[spec.name]
                 if self._method_for(spec.name) == Method.SEQ_REF:
                     x = fc_seq_ref(x, p["w"], p["b"], fused_relu)
@@ -258,6 +291,67 @@ class CNNEngine:
         return self._jit_cache[key]
 
     # -- instrumentation ----------------------------------------------------------
+    def fusion_report(self, fuse: Optional[bool] = None) -> List[dict]:
+        """Executed geometry of every fused group in the plan: the layer
+        names covered, the chain depth (``convs``), the group's output
+        spatial size, and the final-row band the Pallas cell resolves —
+        ``rows_per_cell`` pooled/final rows per grid cell × ``n_tiles``
+        bands per frame (the XLA analogue runs each group as one
+        un-banded pass; the banding reported is the Pallas path's).
+        Shares ``kernels.resolve_ph_block``/``resolve_chain_block`` with
+        the kernels themselves, so the report IS what a Pallas run would
+        execute."""
+        from repro.core.fusion import _conv_out_hw, _pool_out_hw
+        from repro.kernels.conv2d import kernels as K
+        from repro.kernels.conv2d.ops import SUBLANES
+
+        report = []
+        c, h, w = self.net.input_shape
+        for it in self.plan(fuse):
+            if not isinstance(it, FusedLayerSpec):
+                if it.kind == "conv":
+                    h, w = _conv_out_hw(h, w, it)
+                    c = it.out_channels
+                elif it.kind == "pool":
+                    h, w = _pool_out_hw(h, w, it)
+                continue
+            method = self._method_for(it.conv.name)
+            im2col = method in (Method.ADVANCED_SIMD_4,
+                                Method.ADVANCED_SIMD_8)
+            cp = -(-c // SUBLANES) * SUBLANES
+            ohb = self._oh_block_for(it.convs[-1].name)
+            pool_t = (None if it.pool is None else
+                      (it.pool.kernel[0], it.pool.kernel[1],
+                       it.pool.stride[0], it.pool.stride[1]))
+            if len(it.convs) == 1:
+                # single conv + pool: the oc-blocked epilogue kernel
+                cv = it.convs[0]
+                oh, ow = _conv_out_hw(h, w, cv)
+                wp = w + 2 * cv.padding[1]
+                oc = cv.out_channels
+                if not im2col or it.lrn is not None:
+                    ocb = oc  # basic_simd / LRN tail: full oc width
+                else:
+                    ocb = min(4 if method == Method.ADVANCED_SIMD_4 else 8,
+                              oc)
+                ph = (oh - pool_t[0]) // pool_t[2] + 1
+                blk, n_tiles = K.resolve_ph_block(
+                    ph, oh, ow, wp, cp, cv.kernel[0], cv.kernel[1],
+                    cv.stride[0], ocb, pool_t, ohb, im2col=im2col)
+            else:
+                chain, ocs = layers_as_chain(it.convs)
+                blk, n_tiles = K.resolve_chain_block(
+                    h, w, cp, chain, ocs, pool_t, ohb, im2col=im2col)
+            for cv in it.convs:
+                h, w = _conv_out_hw(h, w, cv)
+            c = it.convs[-1].out_channels
+            if it.pool is not None:
+                h, w = _pool_out_hw(h, w, it.pool)
+            report.append({"group": it.name, "convs": len(it.convs),
+                           "rows_per_cell": blk, "n_tiles": n_tiles,
+                           "out_hw": [h, w]})
+        return report
+
     def time_forward(self, params, x, iters: int = 3,
                      fuse: Optional[bool] = None) -> float:
         fn = self.jit_forward(fuse)

@@ -1,37 +1,49 @@
-"""Engine-level fusion planner: conv[+relu][+pool][+lrn] → super-layers.
+"""Engine-level fusion planner: conv-chain[+pool][+lrn] → super-layers.
 
 CNNdroid's headline wins come from eliminating redundant memory passes
 (fused bias/ReLU epilogues, the Fig. 5 overlap).  This module extends
 that idea across layers: it scans a ``NetworkDef`` and greedily groups a
-conv layer, an optional standalone ReLU, an immediately-following pool
-layer, and an immediately-following LRN layer into one
-``FusedLayerSpec``.  The engine executes a group as a single dispatch —
-on the Pallas path the conv kernel pools (and channel-normalizes) its
-band in VMEM and writes only the final activation (neither the conv nor
-the pooled intermediate ever touches HBM); on the XLA path the whole
-group runs in one NHWC pass with a single layout round-trip.
+run of CONSECUTIVE conv layers (interleaved standalone ReLUs absorbed),
+an optional immediately-following pool layer, and an optional trailing
+LRN layer into one ``FusedLayerSpec``.  The engine executes a group as a
+single dispatch — on the Pallas path the chain cell keeps every
+intermediate conv band (halo included) in VMEM and writes only the final
+activation (no intermediate of the run ever touches HBM); on the XLA
+path the whole group runs in one NHWC pass with a single layout
+round-trip.  AlexNet's conv3→conv4→conv5+pool5 — the MAC-heaviest
+stretch of the paper's Table 2 networks — becomes one dispatch writing
+only the pooled band.
 
-Correctness fallbacks — a group is NOT formed (the layers stay on the
-per-layer ladder) when:
+A group needs at least two layers: a lone conv (no following conv or
+pool) stays on the per-layer ladder; a conv chain of length ≥ 2 fuses
+with or without a pool tail.
 
-* the conv layer's execution method is not a SIMD method (``seq_ref`` and
-  ``basic_parallel`` keep the paper's un-fused per-layer semantics),
+Correctness fallbacks — layers stay on the per-layer ladder when:
+
+* a conv's execution method is not a SIMD method (``seq_ref`` and
+  ``basic_parallel`` keep the paper's un-fused per-layer semantics), or
+  two consecutive convs resolve to *different* methods (a chain cell
+  runs one method; the chain breaks between them),
 * the pool kind is not max/avg,
 * the pool window is larger than the conv output (shape-checked by
   propagating spatial dims through the net),
-* the conv, pool, or lrn layer is named in ``no_fuse`` (per-layer
-  opt-out, mirroring ``per_layer_methods``; an opted-out LRN only drops
-  the LRN from the group — conv+pool still fuse),
-* a standalone ReLU sits between conv and pool but ``fuse_relu`` is off
-  (we will not reorder an activation we were told not to fold),
+* a conv, pool, or lrn layer is named in ``no_fuse`` (per-layer opt-out,
+  mirroring ``per_layer_methods``; an opted-out LRN only drops the LRN
+  from the group, an opted-out conv breaks the chain at that conv),
+* a standalone ReLU follows a conv but ``fuse_relu`` is off (we will not
+  reorder an activation we were told not to fold: the chain ends before
+  it and no pool is absorbed across it),
 * the VMEM working-set check fails (Pallas path — the engine passes
   ``vmem_check=use_pallas``, since the one-pass XLA analogue has no VMEM
-  ceiling): the fused kernel shrinks its pooled band (``oh_block``) to
-  fit the soft budget, but its floor cell is one pool window of conv
-  rows — when even THAT cell's modelled footprint (halo-widened input
-  band + patch staging + weights + conv band + pooled band, via
-  ``kernels.fused_cell_bytes``) exceeds the budget, the planner keeps
-  the run un-fused instead of compiling a cell that cannot fit.
+  ceiling): the fused kernel shrinks its final-row band to fit the
+  budget, but its floor cell is one final row — when even THAT cell's
+  modelled footprint (``kernels.fused_cell_bytes`` for single-conv
+  groups, ``kernels.chain_cell_bytes`` — every stage's full-width
+  weights resident plus the peak per-stage band/patch live set — for
+  chains) exceeds the budget, the planner first drops the LRN tail,
+  then falls back to successively SHORTER chains (the detached tail
+  layers re-enter the scan and may group among themselves) before
+  declining fusion outright.
 """
 from __future__ import annotations
 
@@ -60,15 +72,29 @@ _ADVANCED_OC_BLOCK = {Method.ADVANCED_SIMD_4: 4, Method.ADVANCED_SIMD_8: 8}
 
 @dataclass(frozen=True)
 class FusedLayerSpec:
-    """A conv→[ReLU]→pool→[ReLU]→[LRN] super-layer (one dispatch)."""
-    conv: LayerSpec
-    pool: LayerSpec
-    relu: bool        # ReLU between conv and pool (conv's own or absorbed)
+    """A conv→[ReLU]→…→conv→[ReLU]→[pool]→[ReLU]→[LRN] super-layer
+    (one dispatch).  ``convs`` is the chain of consecutive conv stages;
+    ``relus[i]`` is the ReLU after stage i (the conv's own or an absorbed
+    standalone one).  ``pool`` is None for a chain fused without a pool
+    tail."""
+    convs: Tuple[LayerSpec, ...]
+    relus: Tuple[bool, ...]
+    pool: Optional[LayerSpec]
     pool_relu: bool   # ReLU after the pool (pool's own or absorbed)
     names: Tuple[str, ...]  # original layer names this group covers
     lrn: Optional[LayerSpec] = None  # trailing LRN absorbed into the cell
 
     kind = "fused"  # sentinel so plan items can be dispatched on .kind
+
+    @property
+    def conv(self) -> LayerSpec:
+        """The first conv of the chain (single-conv groups: THE conv)."""
+        return self.convs[0]
+
+    @property
+    def relu(self) -> bool:
+        """ReLU between the last conv stage and the pool."""
+        return self.relus[-1]
 
     @property
     def name(self) -> str:
@@ -120,19 +146,56 @@ def fused_working_set(conv: LayerSpec, pool: LayerSpec, method: Method,
         im2col=im2col)
 
 
+def layers_as_chain(convs) -> Tuple[Tuple, Tuple]:
+    """``LayerSpec`` convs → the kernels' chain description: per-stage
+    ``(kh, kw, sy, sx, py, px)`` tuples plus the SUBLANES-padded
+    per-stage output-channel counts (what ``conv2d.ops`` will actually
+    stage — inter-stage channel padding composes through the chain)."""
+    from repro.kernels.conv2d.ops import SUBLANES
+
+    chain = tuple((cv.kernel[0], cv.kernel[1], cv.stride[0], cv.stride[1],
+                   cv.padding[0], cv.padding[1]) for cv in convs)
+    ocs = tuple(-(-cv.out_channels // SUBLANES) * SUBLANES for cv in convs)
+    return chain, ocs
+
+
+def chain_working_set(convs, pool, method: Optional[Method],
+                      cin: int, h_in: int, w_in: int) -> int:
+    """Modelled VMEM bytes of the smallest possible chain grid cell (one
+    final row — one pool window of final-conv rows when ``pool`` is set)
+    for this run of consecutive convs.  Chains run every stage at full
+    output-channel width, so unlike ``fused_working_set`` there is no oc
+    tile to charge — the dominant term is the resident weights of all
+    stages (``kernels.chain_cell_bytes``)."""
+    from repro.kernels.conv2d import kernels as K
+    from repro.kernels.conv2d.ops import SUBLANES
+
+    c = -(-cin // SUBLANES) * SUBLANES
+    chain, ocs = layers_as_chain(convs)
+    pool_t = (None if pool is None else
+              (pool.kernel[0], pool.kernel[1], pool.stride[0],
+               pool.stride[1]))
+    im2col = method is None or method in IM2COL_METHODS
+    return K.chain_cell_bytes(1, h_in, w_in, c, chain, ocs, pool_t,
+                              im2col=im2col)
+
+
 def plan_fusion(net: NetworkDef, *,
                 method_for: Optional[Callable[[str], Method]] = None,
                 no_fuse: Iterable[str] = (),
                 fuse_relu: bool = True,
                 vmem_budget: Optional[int] = None,
                 vmem_check: bool = True) -> List[PlanItem]:
-    """Greedy left-to-right grouping of conv[+relu][+pool][+lrn] runs.
+    """Greedy left-to-right grouping of conv-chain[+relu][+pool][+lrn]
+    runs.
 
     ``method_for`` maps a conv layer name to its execution ``Method`` (the
     engine passes its per-layer resolution; ``None`` assumes the widest
     fused working set, the advanced im2col kernels).  ``vmem_budget``
-    overrides the soft VMEM budget the working-set check runs against
-    (None = ``kernels.VMEM_BUDGET_BYTES``); ``vmem_check=False`` skips
+    overrides the VMEM budget the working-set check runs against (None =
+    ``kernels.VMEM_BUDGET_BYTES`` for single-conv groups and
+    ``kernels.CHAIN_VMEM_BUDGET_BYTES`` for chains, whose grid-invariant
+    resident weights are not double-buffered); ``vmem_check=False`` skips
     the check entirely — the engine passes its ``use_pallas`` here, since
     the one-NHWC-pass XLA analogue has no VMEM ceiling to respect.
     Returns the layer sequence with each fused run replaced by one
@@ -146,16 +209,19 @@ def plan_fusion(net: NetworkDef, *,
     while i < len(layers):
         spec = layers[i]
         if spec.kind == "conv":
-            oh, ow = _conv_out_hw(h, w, spec)
-            group = _try_group(layers, i, oh, ow, method_for, no_fuse,
-                               fuse_relu, c, w, vmem_budget, vmem_check)
-            c = spec.out_channels
+            group = _try_group(layers, i, method_for, no_fuse, fuse_relu,
+                               c, h, w, vmem_budget, vmem_check)
             if group is not None:
                 plan.append(group)
-                h, w = _pool_out_hw(oh, ow, group.pool)
+                for cv in group.convs:
+                    h, w = _conv_out_hw(h, w, cv)
+                c = group.convs[-1].out_channels
+                if group.pool is not None:
+                    h, w = _pool_out_hw(h, w, group.pool)
                 i += len(group.names)
                 continue
-            h, w = oh, ow
+            h, w = _conv_out_hw(h, w, spec)
+            c = spec.out_channels
         elif spec.kind == "pool":
             h, w = _pool_out_hw(h, w, spec)
         plan.append(spec)
@@ -163,77 +229,116 @@ def plan_fusion(net: NetworkDef, *,
     return plan
 
 
-def _try_group(layers, i, oh, ow, method_for, no_fuse, fuse_relu,
-               cin, w_in, vmem_budget,
-               vmem_check=True) -> Optional[FusedLayerSpec]:
+def _try_group(layers, i, method_for, no_fuse, fuse_relu, cin, h_in, w_in,
+               vmem_budget, vmem_check=True) -> Optional[FusedLayerSpec]:
     """A FusedLayerSpec for the run starting at conv ``layers[i]``, or
     None when any eligibility check fails (the per-layer fallback)."""
-    conv = layers[i]
-    if conv.name in no_fuse:
+    first = layers[i]
+    if first.name in no_fuse:
         return None
-    method = method_for(conv.name) if method_for is not None else None
+    method = method_for(first.name) if method_for is not None else None
     if method is not None and method not in FUSABLE_METHODS:
         return None
-    names = [conv.name]
-    relu = conv.relu
+    # -- collect the maximal conv chain (absorbing standalone ReLUs) -------
+    convs = [first]
+    relus = [first.relu]
+    conv_names = [[first.name]]  # per-stage names incl. absorbed ReLUs
+    h, w = _conv_out_hw(h_in, w_in, first)
     j = i + 1
-    if j < len(layers) and layers[j].kind == "relu":
-        if not fuse_relu:
-            return None  # a standalone ReLU we may not fold blocks fusion
-        relu = True
-        names.append(layers[j].name)
+    blocked_by_relu = False  # an un-foldable standalone ReLU ends the run
+    while True:
+        if j < len(layers) and layers[j].kind == "relu":
+            if not fuse_relu:
+                blocked_by_relu = True
+                break
+            relus[-1] = True
+            conv_names[-1].append(layers[j].name)
+            j += 1
+        nxt = layers[j] if j < len(layers) else None
+        if (nxt is None or nxt.kind != "conv" or nxt.name in no_fuse
+                or (method_for is not None
+                    and method_for(nxt.name) != method)):
+            break
+        oh2, ow2 = _conv_out_hw(h, w, nxt)
+        if oh2 < 1 or ow2 < 1:
+            break
+        convs.append(nxt)
+        relus.append(nxt.relu)
+        conv_names.append([nxt.name])
+        h, w = oh2, ow2
         j += 1
-    if j >= len(layers) or layers[j].kind != "pool":
-        return None
-    pool = layers[j]
-    if pool.name in no_fuse:
-        return None
-    if pool.pool_kind not in SUPPORTED_POOL_KINDS:
-        return None
-    pkh, pkw = pool.kernel
-    if pkh < 1 or pkw < 1 or pool.stride[0] < 1 or pool.stride[1] < 1:
-        return None
-    if pkh > oh or pkw > ow:
-        return None  # pool window larger than the conv output
-    names.append(pool.name)
-    pool_relu = pool.relu
-    k = j + 1
-    if fuse_relu and k < len(layers) and layers[k].kind == "relu":
-        pool_relu = True
-        names.append(layers[k].name)
-        k += 1
+    # -- optional pool (+ReLU) and LRN tail on the last conv ---------------
+    pool = None
+    pool_relu = False
+    pool_names: List[str] = []
     lrn = None
-    if (k < len(layers) and layers[k].kind == "lrn"
-            and layers[k].name not in no_fuse):
-        lrn = layers[k]
-        names.append(lrn.name)
-    # VMEM working-set check (Pallas path only): the fused kernel shrinks
-    # its pooled band to fit, but never below one pool window of conv
-    # rows — when even that floor cell busts the budget, decline (first
-    # retrying without the LRN tail, whose full-width oc tile is the
-    # widest working set)
-    if vmem_check and not _fits_vmem(conv, pool, method, cin, w_in,
-                                     lrn is not None, vmem_budget):
-        if lrn is not None and _fits_vmem(conv, pool, method, cin, w_in,
-                                          False, vmem_budget):
-            names.pop()
-            lrn = None
-        else:
-            return None
-    return FusedLayerSpec(conv=conv, pool=pool, relu=relu,
-                          pool_relu=pool_relu, names=tuple(names), lrn=lrn)
+    if not blocked_by_relu and j < len(layers) and layers[j].kind == "pool":
+        p = layers[j]
+        pkh, pkw = p.kernel
+        if (p.name not in no_fuse and p.pool_kind in SUPPORTED_POOL_KINDS
+                and pkh >= 1 and pkw >= 1
+                and p.stride[0] >= 1 and p.stride[1] >= 1
+                and pkh <= h and pkw <= w):
+            pool = p
+            pool_relu = p.relu
+            pool_names = [p.name]
+            k = j + 1
+            if fuse_relu and k < len(layers) and layers[k].kind == "relu":
+                pool_relu = True
+                pool_names.append(layers[k].name)
+                k += 1
+            if (k < len(layers) and layers[k].kind == "lrn"
+                    and layers[k].name not in no_fuse):
+                lrn = layers[k]
+    # -- VMEM working-set check with shorter-chain fallback ----------------
+    # (Pallas path only): the fused kernel shrinks its final-row band to
+    # fit, but never below one final row — when even that floor cell
+    # busts the budget, first drop the LRN tail, then trailing convs
+    # (the detached pool/convs re-enter the greedy scan), and only
+    # decline outright at a single conv+pool that still cannot fit.
+    if vmem_check:
+        while True:
+            if len(convs) == 1 and pool is None:
+                return None
+            if _fits_vmem(convs, pool, method, cin, h_in, w_in,
+                          lrn is not None, vmem_budget):
+                break
+            if lrn is not None:
+                lrn = None
+                continue
+            if len(convs) == 1:
+                return None  # single conv+pool whose floor cell busts
+            convs.pop()
+            relus.pop()
+            conv_names.pop()
+            pool, pool_relu, pool_names = None, False, []
+    if len(convs) == 1 and pool is None:
+        return None  # a lone conv is not a super-layer
+    names = (tuple(n for stage in conv_names for n in stage)
+             + tuple(pool_names) + ((lrn.name,) if lrn is not None else ()))
+    return FusedLayerSpec(convs=tuple(convs), relus=tuple(relus), pool=pool,
+                          pool_relu=pool_relu, names=names, lrn=lrn)
 
 
-def _fits_vmem(conv, pool, method, cin, w_in, with_lrn, vmem_budget) -> bool:
+def _fits_vmem(convs, pool, method, cin, h_in, w_in, with_lrn,
+               vmem_budget) -> bool:
     from repro.kernels.conv2d import kernels as K
 
+    if len(convs) > 1:
+        # chain cells: full width at every stage, resident weights —
+        # checked against the near-full-VMEM chain budget (method=None
+        # charges im2col staging, the widest any fusable method stages)
+        budget = (K.CHAIN_VMEM_BUDGET_BYTES if vmem_budget is None
+                  else vmem_budget)
+        return chain_working_set(convs, pool, method, cin, h_in,
+                                 w_in) <= budget
     budget = K.VMEM_BUDGET_BYTES if vmem_budget is None else vmem_budget
     # unknown method (method_for=None): charge the widest cell any
     # fusable method would stage — basic_simd's full-width oc terms and
     # the advanced kernels' im2col staging dominate different regimes
     methods = ((method,) if method is not None
                else (Method.BASIC_SIMD, Method.ADVANCED_SIMD_8))
-    return max(fused_working_set(conv, pool, m, cin, w_in, lrn=with_lrn)
+    return max(fused_working_set(convs[0], pool, m, cin, w_in, lrn=with_lrn)
                for m in methods) <= budget
 
 

@@ -326,6 +326,91 @@ def conv2d_pool_fused(x, w, b, method: "Method", stride=(1, 1),
 
 
 # ---------------------------------------------------------------------------
+# fused conv→conv chain super-layer (VMEM-resident halo between stages)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_chain_fused(x, ws, bs, method: "Method", strides, paddings,
+                       relus, pool_kernel=None, pool_stride=None,
+                       pool_kind: str = "max", pool_relu: bool = False,
+                       use_pallas=False, oh_block=None, lrn_n=None,
+                       lrn_alpha: float = 1e-4, lrn_beta: float = 0.75,
+                       lrn_k: float = 1.0):
+    """One-dispatch conv→[ReLU]→conv→…→[pool]→[ReLU]→[LRN] (a chain
+    ``FusedLayerSpec``).
+
+    ``ws``/``bs``: per-stage OIHW weights and biases; ``strides``/
+    ``paddings``/``relus``: parallel per-stage tuples.  SIMD methods only.
+    On the Pallas path each grid cell computes an output-row band of the
+    final stage with every intermediate activation (halo included)
+    VMEM-resident — AlexNet's conv3→conv4→conv5(+pool5) is one dispatch
+    writing only the pooled band.  The XLA analogue runs the whole chain
+    in one NHWC pass (full-width matmuls, a single layout round-trip for
+    the run instead of one per layer), with the same optional
+    pool/``lrn_n`` tail as ``conv2d_pool_fused``.
+    """
+    if method == Method.BASIC_SIMD:
+        pallas_method = "basic_simd"
+    elif method in (Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8):
+        pallas_method = f"advanced_simd_{4 if method == Method.ADVANCED_SIMD_4 else 8}"
+    else:
+        raise ValueError(f"fused conv chain requires a SIMD method: {method}")
+    if lrn_n is not None and pool_kernel is None:
+        raise ValueError("fused LRN epilogue requires a fused pool epilogue")
+    if use_pallas:
+        from repro.kernels.conv2d import ops as conv_ops
+
+        return conv_ops.conv2d_chain(
+            x, tuple(ws), tuple(bs), tuple(strides), tuple(paddings),
+            tuple(relus), method=pallas_method, oh_block=oh_block,
+            pool_kernel=pool_kernel, pool_stride=pool_stride,
+            pool_kind=pool_kind, pool_relu=pool_relu, lrn_n=lrn_n,
+            lrn_alpha=lrn_alpha, lrn_beta=lrn_beta, lrn_k=lrn_k)
+    xh = nchw_to_nhwc(x).astype(jnp.float32)  # one swap for the whole chain
+    for w, b, stride, padding, relu in zip(ws, bs, strides, paddings, relus):
+        wh = oihw_to_hwio(w)
+        kh, kw, ci, oc = wh.shape
+        sy, sx = stride
+        py, px = padding
+        xp = jnp.pad(xh, ((0, 0), (py, py), (px, px), (0, 0)))
+        oh = _out_size(xh.shape[1], kh, sy, py)
+        ow = _out_size(xh.shape[2], kw, sx, px)
+        if method == Method.BASIC_SIMD:
+            out = _conv_positions_nhwc(xp, wh, oh, ow, sy, sx)
+        else:
+            # chain stages run at full output-channel width (stage N+1
+            # consumes every channel of stage N), like the Pallas cell
+            patches = _im2col_nhwc(xp, kh, kw, oh, ow, sy, sx)
+            out = jnp.einsum("nhwk,ko->nhwo", patches.astype(jnp.float32),
+                             wh.reshape(kh * kw * ci, oc)
+                             .astype(jnp.float32))
+        out = out + b[None, None, None, :].astype(jnp.float32)
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        xh = out
+    if pool_kernel is not None:
+        pkh, pkw = pool_kernel
+        psy, psx = pool_stride if pool_stride is not None else pool_kernel
+        if pool_kind == "max":
+            xh = jax.lax.reduce_window(
+                xh, -jnp.inf, jax.lax.max, (1, pkh, pkw, 1),
+                (1, psy, psx, 1), "VALID")
+        elif pool_kind == "avg":
+            xh = jax.lax.reduce_window(
+                xh, 0.0, jax.lax.add, (1, pkh, pkw, 1), (1, psy, psx, 1),
+                "VALID") / float(pkh * pkw)
+        else:
+            raise ValueError(pool_kind)
+        if pool_relu:
+            xh = jnp.maximum(xh, 0.0)
+        if lrn_n is not None:
+            from repro.kernels.conv2d.kernels import lrn_band
+
+            xh = lrn_band(xh, lrn_n, lrn_alpha, lrn_beta, lrn_k)
+    return nhwc_to_nchw(xh.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
 # FC ladder (§4 "fully connected layers are also accelerated")
 # ---------------------------------------------------------------------------
 

@@ -60,6 +60,24 @@ band that fits the budget, and the fusion planner
 (``repro.core.fusion``) evaluates the same model at the one-pool-window
 floor to decline fusion for shapes whose smallest possible cell would
 still bust the budget.
+
+Fused conv→conv chains (VMEM-resident halo): ``conv2d_chain_simd`` runs
+a whole run of consecutive convolutions as ONE grid cell per output-row
+band — the cell computes a band of conv A, keeps it in VMEM, and
+immediately convolves it with conv B's weights, with bias+ReLU between
+stages and the pool/LRN epilogue allowed on the tail.  The band math
+composes backwards across stages: a band of ``ohb`` final rows needs
+``(ohb-1)*sB + kB`` rows of A's output, hence
+``((ohb-1)*sB + kB - 1)*sA + kA`` input rows (``chain_band_geometry``).
+Intermediate vertical padding cannot be materialized host-side (the pad
+rows are *activation* zeros, not conv-of-zero-input), so each
+intermediate stage zero-masks the rows of its band that fall outside its
+valid output range — those rows ARE the next stage's padding.  Stage N+1
+consumes every output channel of stage N, so chain cells run all stages
+at full oc width (no oc-grid blocking); ``chain_cell_bytes`` /
+``auto_chain_block`` generalize the working-set model to the per-stage
+live sets (weights of every stage stay resident; the per-stage
+band+patch temporaries are sequential, so their *maximum* is charged).
 """
 from __future__ import annotations
 
@@ -73,6 +91,15 @@ from jax.experimental.pallas import tpu as pltpu
 # Target working set per grid cell — half the ~16 MB/core VMEM, leaving the
 # other half for the pipeline's double buffering.
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+# Chain cells keep every stage's full-width weights resident (stage N+1
+# consumes every output channel of stage N, so there is no oc tile to
+# shrink them).  Weights are grid-invariant — fetched once, never
+# double-buffered — so the chain check runs against near-full VMEM
+# capacity (16 MB minus pipeline headroom) instead of the half-capacity
+# streaming budget; the streamed input/output bands are charged on top of
+# the per-stage live set, standing in for their double buffers.
+CHAIN_VMEM_BUDGET_BYTES = 14 * 1024 * 1024
 
 
 def _out_size(size, k, stride, pad):
@@ -162,6 +189,36 @@ def auto_ph_block(ph, ow, wp, c, kh, kw, sy, oc_block, pool,
                             im2col=im2col) <= budget:
             return phb
     return 1
+
+
+def _equalize_bands(blk, target):
+    """Clamp a band size to ``target`` rows, then re-snap it to
+    ``ceil(target / n_tiles)`` so the ragged last band shrinks to its fair
+    share instead of fetching a full band of mostly-pad input rows.
+    Returns ``(blk, n_tiles)``."""
+    blk = max(1, min(blk, target))
+    n_tiles = -(-target // blk)
+    blk = -(-target // n_tiles)
+    return blk, -(-target // blk)
+
+
+def resolve_ph_block(ph, oh, ow, wp, c, kh, kw, sy, oc_block, pool, oh_block,
+                     im2col: bool = True) -> tuple:
+    """The equalized pooled-row band a fused conv+pool cell will execute
+    with, as ``(ph_block, n_tiles)``: the ``auto_ph_block`` walk when
+    ``oh_block`` is None, else the explicit conv band snapped down to
+    whole pool windows.  Public so the engine's geometry report shares
+    the exact resolution the kernels run."""
+    pkh, _, psy, _ = pool
+    if oh_block is None:
+        phb = auto_ph_block(ph, ow, wp, c, kh, kw, sy, oc_block, pool,
+                            im2col=im2col)
+    else:
+        # snap the explicit conv band to the pool stride: the largest
+        # pooled-row count whose conv band fits inside the oh-band
+        ohb = max(1, min(oh_block, oh))
+        phb = max(1, (ohb - pkh) // psy + 1) if ohb >= pkh else 1
+    return _equalize_bands(phb, ph)
 
 
 def lrn_band(x, n, alpha, beta, k):
@@ -296,20 +353,8 @@ def _plan_pool_tiles(xp, oh, ow, kh, kw, sy, oh_block, oc_block, pool,
     if ph < 1 or pw < 1:
         raise ValueError(
             f"pool window ({pkh},{pkw}) larger than conv output ({oh},{ow})")
-    if oh_block is None:
-        phb = auto_ph_block(ph, ow, wp, c, kh, kw, sy, oc_block,
-                            (pkh, pkw, psy, psx), im2col=im2col)
-    else:
-        # snap the explicit conv band to the pool stride: the largest
-        # pooled-row count whose conv band fits inside the oh-band
-        ohb = max(1, min(oh_block, oh))
-        phb = max(1, (ohb - pkh) // psy + 1) if ohb >= pkh else 1
-    phb = min(phb, ph)
-    n_tiles = -(-ph // phb)
-    # equalize: same tile count, smallest per-band size — the ragged last
-    # band shrinks to its fair share and stops over-fetching pad rows
-    phb = -(-ph // n_tiles)
-    n_tiles = -(-ph // phb)
+    phb, n_tiles = resolve_ph_block(ph, oh, ow, wp, c, kh, kw, sy, oc_block,
+                                    pool, oh_block, im2col=im2col)
     cband = (phb - 1) * psy + pkh           # conv rows per cell
     band = (cband - 1) * sy + kh            # input rows per cell (halo incl.)
     row_step = phb * psy * sy
@@ -540,3 +585,315 @@ def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
     if pool_kernel is not None:
         return out[:, :ph, :, :oc]
     return out[:, :oh, :, :oc]
+
+
+# ---------------------------------------------------------------------------
+# fused conv→conv chains — a run of convolutions per grid cell, the
+# intermediate activations (and their halos) VMEM-resident
+# ---------------------------------------------------------------------------
+#
+# A chain is described by per-stage tuples ``(kh, kw, sy, sx, py, px)`` plus
+# the per-stage output-channel counts ``ocs``.  Stage 0's padding is applied
+# host-side (like the single-conv kernels); every later stage's horizontal
+# padding is materialized in VMEM (``jnp.pad`` on the band's width axis) and
+# its *vertical* padding is realized by the zero-masked halo rows of the
+# previous stage's band.
+
+
+def chain_stage_dims(h, w, c, chain, ocs):
+    """Per-stage ``(oh, ow, cin, oc)`` propagated through the chain from
+    the (unpadded) chain input ``(h, w, c)``."""
+    dims = []
+    for (kh, kw, sy, sx, py, px), oc in zip(chain, ocs):
+        oh = (h + 2 * py - kh) // sy + 1
+        ow = (w + 2 * px - kw) // sx + 1
+        dims.append((oh, ow, c, oc))
+        h, w, c = oh, ow, oc
+    return dims
+
+
+def chain_band_geometry(blk, chain, pool):
+    """Backward halo composition for one chain cell producing ``blk``
+    final rows (pooled rows when ``pool`` is set).
+
+    Returns ``(m, offs, band, in_step, in_base)``: ``m[i]`` is the rows of
+    stage i's output band the cell materializes (``m[i-1] = (m[i]-1)*sy_i
+    + kh_i`` — stage i's halo-widened input demand), ``offs[i] = (A, B)``
+    the affine map from band index ``t`` to stage i's global starting row
+    (``A*t + B``; B goes negative where intermediate vertical padding is
+    consumed), ``band`` the input rows per cell, and ``(in_step,
+    in_base)`` the affine input-row offset in stage-0 *padded-input*
+    coordinates (``in_base`` ≤ 0: the caller pre-pads that many extra
+    zero rows on top).
+    """
+    s = len(chain)
+    m = [0] * s
+    offs = [(0, 0)] * s
+    if pool is not None:
+        pkh, _, psy, _ = pool
+        m[-1] = (blk - 1) * psy + pkh
+        offs[-1] = (blk * psy, 0)
+    else:
+        m[-1] = blk
+        offs[-1] = (blk, 0)
+    for i in range(s - 1, 0, -1):
+        kh, _, sy, _, py, _ = chain[i]
+        a, b = offs[i]
+        m[i - 1] = (m[i] - 1) * sy + kh
+        offs[i - 1] = (a * sy, b * sy - py)
+    kh0, _, sy0, _, _, _ = chain[0]
+    band = (m[0] - 1) * sy0 + kh0
+    a0, b0 = offs[0]
+    return m, offs, band, a0 * sy0, b0 * sy0
+
+
+def chain_cell_bytes(blk, h, w, c, chain, ocs, pool,
+                     im2col: bool = True, itemsize: int = 4) -> int:
+    """Modelled VMEM live set of ONE chain grid cell producing ``blk``
+    final rows (pooled rows when ``pool`` is set).
+
+    Chains hold every stage's full-width weights resident (no oc tile to
+    shrink them) for the whole cell; the per-stage temporaries — incoming
+    band, patch staging, outgoing band — are sequential, only one stage's
+    set is live at a time, so their *maximum* is charged rather than
+    their sum.  The streamed input band and final output band are charged
+    once more on top, standing in for their pipeline double buffers.  The
+    same model backs the kernel-side ``auto_chain_block`` walk and the
+    planner's decline-to-fuse check, so the planner never approves a
+    chain the kernel cannot stage.
+    """
+    dims = chain_stage_dims(h, w, c, chain, ocs)
+    m, _, band, _, _ = chain_band_geometry(blk, chain, pool)
+    weights = 0
+    stage_peak = 0
+    in_rows, in_w = band, w + 2 * chain[0][5]
+    for i, ((kh, kw, sy, sx, py, px), (oh, ow, ci, oc)) in enumerate(
+            zip(chain, dims)):
+        weights += kh * kw * ci * oc
+        patch_c = kh * kw * ci if im2col else ci
+        stage_peak = max(stage_peak,
+                         in_rows * in_w * ci     # incoming band
+                         + m[i] * ow * patch_c   # patch staging
+                         + m[i] * ow * oc)       # outgoing band
+        if i + 1 < len(chain):
+            in_rows, in_w = m[i], ow + 2 * chain[i + 1][5]
+    oh_f, ow_f, _, oc_f = dims[-1]
+    if pool is not None:
+        pkh, pkw, psy, psx = pool
+        out_stream = blk * ((ow_f - pkw) // psx + 1) * oc_f
+    else:
+        out_stream = blk * ow_f * oc_f
+    in_stream = band * (w + 2 * chain[0][5]) * c
+    return (weights + stage_peak + in_stream + out_stream) * itemsize
+
+
+def auto_chain_block(target, h, w, c, chain, ocs, pool,
+                     budget: int = None, im2col: bool = True) -> int:
+    """Largest final-row band whose chain-cell live set fits ``budget``
+    (default ``CHAIN_VMEM_BUDGET_BYTES``); floors at one final row —
+    which may exceed the budget: the planner's job is to keep such chains
+    un-fused (or shortened) in the first place."""
+    budget = CHAIN_VMEM_BUDGET_BYTES if budget is None else budget
+    candidates = [target] + [b for b in (512, 256, 128, 64, 32, 16, 8, 4,
+                                         2, 1) if b < target]
+    for blk in candidates:
+        if chain_cell_bytes(blk, h, w, c, chain, ocs, pool,
+                            im2col=im2col) <= budget:
+            return blk
+    return 1
+
+
+def resolve_chain_block(h, w, c, chain, ocs, pool, oh_block,
+                        im2col: bool = True, budget: int = None) -> tuple:
+    """The equalized final-row band a chain cell will execute with, as
+    ``(blk, n_tiles)`` — the ``auto_chain_block`` walk when ``oh_block``
+    is None, else the explicit final-stage conv band (snapped down to
+    whole pool windows when a pool tail is fused).  Public so the
+    engine's geometry report shares the exact resolution the kernel
+    runs."""
+    dims = chain_stage_dims(h, w, c, chain, ocs)
+    oh_f, ow_f = dims[-1][0], dims[-1][1]
+    if pool is not None:
+        pkh, pkw, psy, psx = pool
+        target = (oh_f - pkh) // psy + 1
+        if target < 1 or (ow_f - pkw) // psx + 1 < 1:
+            raise ValueError(f"pool window ({pkh},{pkw}) larger than final "
+                             f"conv output ({oh_f},{ow_f})")
+    else:
+        target = oh_f
+    if oh_block is None:
+        blk = auto_chain_block(target, h, w, c, chain, ocs, pool,
+                               budget=budget, im2col=im2col)
+    elif pool is not None:
+        ohb = max(1, min(oh_block, oh_f))
+        blk = max(1, (ohb - pkh) // psy + 1) if ohb >= pkh else 1
+    else:
+        blk = oh_block
+    return _equalize_bands(blk, target)
+
+
+def _band_conv(x, w_ref, kh, kw, sy, sx, m, ow, im2col):
+    """One chain stage's conv over an in-VMEM fp32 band: ``x`` is
+    ``[rows, width, C]``, returns the pre-bias ``[m*ow, OC]`` product —
+    the full im2col matmul (advanced) or the per-kernel-position channel
+    dots (basic)."""
+    c = x.shape[2]
+    if im2col:
+        cols = []
+        for i in range(kh):
+            for j in range(kw):
+                cols.append(jax.lax.slice(
+                    x, (i, j, 0),
+                    (i + (m - 1) * sy + 1, j + (ow - 1) * sx + 1, c),
+                    (sy, sx, 1),
+                ).reshape(m * ow, -1))
+        patches = jnp.concatenate(cols, axis=-1)  # [rows, KH*KW*C]
+        return jnp.dot(patches, w_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    acc = jnp.zeros((m * ow, w_ref.shape[-1]), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x, (i, j, 0),
+                (i + (m - 1) * sy + 1, j + (ow - 1) * sx + 1, c),
+                (sy, sx, 1),
+            ).reshape(m * ow, -1)
+            # vectorized dot over channels per kernel position (§4.3)
+            acc = acc + jnp.dot(patch, w_ref[i, j].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+    return acc
+
+
+def _chain_simd_kernel(x_ref, *refs, stages, pool, lrn, im2col):
+    # x_ref: [1, BAND, WP0, C] (halo-widened chain-input band);
+    # refs: (w0, b0, w1, b1, ..., o_ref); stages: per-stage static tuples
+    # (kh, kw, sy, sx, px, m, ow, relu, oh_valid, A, B) where px is the
+    # stage's own horizontal padding (0 for stage 0 — host-applied),
+    # m/ow the stage's band geometry, oh_valid its true output height and
+    # (A, B) the affine band-index→global-row map for the padding mask.
+    o_ref = refs[-1]
+    wb = refs[:-1]
+    t = pl.program_id(1)
+    band = x_ref[0].astype(jnp.float32)
+    last = len(stages) - 1
+    for si, (kh, kw, sy, sx, px, m, ow, relu, oh_valid, a, b0) in enumerate(
+            stages):
+        if px:
+            # this stage's horizontal padding, materialized in VMEM
+            band = jnp.pad(band, ((0, 0), (px, px), (0, 0)))
+        acc = _band_conv(band, wb[2 * si], kh, kw, sy, sx, m, ow, im2col)
+        acc = acc + wb[2 * si + 1][...].astype(jnp.float32)
+        if si == last:
+            if pool is not None:  # pool(/LRN) the final band in VMEM
+                _pool_epilogue(acc, o_ref, pool, relu, lrn)
+            else:
+                if relu:
+                    acc = jnp.maximum(acc, 0.0)
+                o_ref[...] = acc.reshape(m, ow, -1).astype(o_ref.dtype)
+            return
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        out = acc.reshape(m, ow, -1)
+        # rows outside this stage's true output ARE the next stage's
+        # vertical padding (activation zeros — NOT conv-of-pad-input,
+        # which relu(bias) would corrupt): zero-mask them by global row
+        rows = (a * t + b0 + jax.lax.broadcasted_iota(jnp.int32, (m, 1, 1),
+                                                      0))
+        band = jnp.where((rows >= 0) & (rows < oh_valid), out, 0.0)
+
+
+def conv2d_chain_simd(x_nhwc, ws, bs, strides, paddings, relus,
+                      im2col: bool = True, oh_block=None,
+                      interpret: bool = False, pool_kernel=None,
+                      pool_stride=None, pool_kind: str = "max",
+                      pool_relu: bool = False, lrn=None):
+    """A chain of consecutive convolutions as one fused dispatch.
+
+    ``ws``: per-stage HWIO weights (channel-contiguous: stage i's input
+    channels equal stage i-1's output channels); ``bs``/``strides``/
+    ``paddings``/``relus`` parallel per-stage lists.  Each grid cell
+    computes an output-row band of the FINAL stage — pooled rows when
+    ``pool_kernel`` is set — staging every intermediate band (halo
+    included) in VMEM; only the final band is written to HBM.  All stages
+    run at full output-channel width (stage N+1 consumes every channel of
+    stage N).  ``im2col`` selects the advanced (patch-matrix matmul) or
+    basic (per-position channel dots) stage compute.
+    """
+    n, h, wd, c = x_nhwc.shape
+    s = len(ws)
+    if not (len(bs) == len(strides) == len(paddings) == len(relus) == s):
+        raise ValueError("chain stage lists must have equal length")
+    if lrn is not None and pool_kernel is None:
+        raise ValueError("fused LRN epilogue requires a fused pool epilogue")
+    chain = tuple((w.shape[0], w.shape[1], st[0], st[1], pd[0], pd[1])
+                  for w, st, pd in zip(ws, strides, paddings))
+    ocs = tuple(w.shape[3] for w in ws)
+    dims = chain_stage_dims(h, wd, c, chain, ocs)
+    for oh_i, ow_i, _, _ in dims:
+        if oh_i < 1 or ow_i < 1:
+            raise ValueError("chain stage output collapsed to zero size")
+    oh_f, ow_f, _, oc_f = dims[-1]
+    if pool_kernel is not None:
+        pkh, pkw = pool_kernel
+        psy, psx = pool_stride if pool_stride is not None else pool_kernel
+        pool_g = (pkh, pkw, psy, psx)
+        target = (oh_f - pkh) // psy + 1
+        out_cols = (ow_f - pkw) // psx + 1
+        if target < 1 or out_cols < 1:
+            raise ValueError(f"pool window {pool_kernel} larger than final "
+                             f"conv output ({oh_f},{ow_f})")
+        pool = (pkh, pkw, psy, psx, pool_kind, pool_relu, ow_f)
+    else:
+        pool_g, pool = None, None
+        target, out_cols = oh_f, ow_f
+    blk, n_tiles = resolve_chain_block(h, wd, c, chain, ocs, pool_g,
+                                       oh_block, im2col=im2col)
+    m, offs, band, in_step, in_base = chain_band_geometry(blk, chain, pool_g)
+    # stage-0 padding host-side (+ the extra top rows the intermediate
+    # vertical padding pulls the first band up into, all genuine zeros)
+    py0, px0 = paddings[0]
+    top = py0 + max(0, -in_base)
+    base = in_base + max(0, -in_base)
+    hp_need = (n_tiles - 1) * in_step + base + band
+    bot = max(py0, hp_need - (h + top))
+    xp = jnp.pad(x_nhwc, ((0, 0), (top, bot), (px0, px0), (0, 0)))
+    wp0 = xp.shape[2]
+    stages = tuple(
+        (kh, kw, sy, sx, 0 if i == 0 else px, m[i], dims[i][1], relus[i],
+         dims[i][0], offs[i][0], offs[i][1])
+        for i, (kh, kw, sy, sx, py, px) in enumerate(chain))
+    kern = functools.partial(_chain_simd_kernel, stages=stages, pool=pool,
+                             lrn=lrn, im2col=im2col)
+    in_specs = [
+        # element-offset indexing: chain bands overlap by the composed halo
+        pl.BlockSpec((1, band, wp0, c),
+                     lambda i, t: (i, t * in_step + base, 0, 0),
+                     indexing_mode=pl.Unblocked()),
+    ]
+    operands = [xp]
+    for w, b in zip(ws, bs):
+        kh, kw, ci, oc = w.shape
+        if im2col:
+            operands.append(w.reshape(kh * kw * ci, oc))
+            in_specs.append(pl.BlockSpec((kh * kw * ci, oc),
+                                         lambda i, t: (0, 0)))
+        else:
+            operands.append(w)
+            in_specs.append(pl.BlockSpec((kh, kw, ci, oc),
+                                         lambda i, t: (0, 0, 0, 0)))
+        operands.append(b)
+        in_specs.append(pl.BlockSpec((oc,), lambda i, t: (0,)))
+    out = pl.pallas_call(
+        kern,
+        grid=(n, n_tiles),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((None, blk, out_cols, oc_f),
+                               lambda i, t: (i, t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n_tiles * blk, out_cols, oc_f),
+                                       x_nhwc.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(*operands)
+    return out[:, :target]

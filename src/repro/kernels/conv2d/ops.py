@@ -91,4 +91,57 @@ def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
     return nhwc_to_nchw(out)
 
 
+@partial(jax.jit, static_argnames=("strides", "paddings", "relus", "method",
+                                   "oh_block", "interpret", "pool_kernel",
+                                   "pool_stride", "pool_kind", "pool_relu",
+                                   "lrn_n", "lrn_alpha", "lrn_beta", "lrn_k"))
+def conv2d_chain(x, ws, bs, strides, paddings, relus,
+                 method: str = "advanced_simd_128", oh_block: int = None,
+                 interpret: bool = None, pool_kernel=None, pool_stride=None,
+                 pool_kind: str = "max", pool_relu: bool = False,
+                 lrn_n: int = None, lrn_alpha: float = 1e-4,
+                 lrn_beta: float = 0.75, lrn_k: float = 1.0):
+    """A chain of consecutive convolutions as ONE fused dispatch.
+
+    ``x``: [N, C, H, W]; ``ws``/``bs``: per-stage OIHW weights and biases
+    (stage i's input channels = stage i-1's output channels); ``strides``/
+    ``paddings``/``relus``: parallel static per-stage tuples.  SIMD
+    methods only — the chain cell computes an output-row band of the
+    final stage with every intermediate activation (halo included)
+    VMEM-resident; ``pool_kernel``(+``lrn_n``) fuse the usual pool/LRN
+    tail onto the last stage.  The dimension swap happens once for the
+    whole chain, and inter-stage channel padding composes: a stage's
+    zero-padded output channels are exact zeros (zero weight columns,
+    zero bias), so the next stage's zero-padded input rows consume them
+    harmlessly.
+    """
+    if not method.startswith(("basic_simd", "advanced_simd")):
+        raise ValueError("fused conv chain requires a SIMD method")
+    if lrn_n is not None and pool_kernel is None:
+        raise ValueError("fused LRN epilogue requires a fused pool epilogue")
+    lrn = (lrn_n, lrn_alpha, lrn_beta, lrn_k) if lrn_n is not None else None
+    interp = (not _on_tpu()) if interpret is None else interpret
+    im2col = method.startswith("advanced_simd")
+    xh = nchw_to_nhwc(x)
+    xh, _ = pad_axis(xh, 3, SUBLANES)
+    cp = xh.shape[3]
+    whs, bps = [], []
+    oc_f = ws[-1].shape[0]
+    for w, b in zip(ws, bs):
+        wh = oihw_to_hwio(w)  # [kh, kw, ci, oc]
+        pad_in = cp - wh.shape[2]
+        ocp = -(-wh.shape[3] // SUBLANES) * SUBLANES
+        wh = jnp.pad(wh, ((0, 0), (0, 0), (0, pad_in),
+                          (0, ocp - wh.shape[3])))
+        whs.append(wh)
+        bps.append(jnp.pad(b, (0, ocp - b.shape[0])))
+        cp = ocp
+    out = K.conv2d_chain_simd(xh, whs, bps, strides, paddings, relus,
+                              im2col=im2col, oh_block=oh_block,
+                              interpret=interp, pool_kernel=pool_kernel,
+                              pool_stride=pool_stride, pool_kind=pool_kind,
+                              pool_relu=pool_relu, lrn=lrn)
+    return nhwc_to_nchw(out[..., :oc_f])
+
+
 conv2d_reference = conv2d_ref

@@ -64,7 +64,20 @@ class ServingEngine:
 
     # -- client API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        self._check_prompt(req)
         self.pending.put(req)
+
+    def _check_prompt(self, req: Request) -> None:
+        """A slot's KV cache holds ``max_len`` rows and decoding needs at
+        least one free row past the prompt — an oversized prompt would
+        overflow the slot's cache rows at prefill (and ``_decode_step``
+        would then write past ``max_len``)."""
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of request {req.rid} has {len(req.prompt)} tokens; "
+                f"the engine's slots hold max_len={self.max_len} KV rows "
+                f"and decoding needs at least one free row — prompts must "
+                f"be shorter than max_len")
 
     def run_until_drained(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         steps = 0
@@ -98,6 +111,7 @@ class ServingEngine:
 
     # -- internals -----------------------------------------------------------------
     def _prefill_into_slot(self, i: int, req: Request) -> None:
+        self._check_prompt(req)  # guard direct callers too
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
         cache1 = self.model.init_cache(1, self.max_len, self.window)
         batch = {"tokens": prompt}

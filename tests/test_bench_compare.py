@@ -100,6 +100,42 @@ def test_main_exit_codes_and_table(tmp_path, capsys):
                                "--max-regress-pct", "150"]) == 0
 
 
+def test_group_changes_and_geometry_reported_not_gated(tmp_path, capsys):
+    """A re-planned fused-group composition (e.g. a conv run newly fused
+    as a chain) and the executed chain geometry are carried into the
+    report, but never gate; files without the new fields stay
+    renderable."""
+    prev = _bench({
+        "alexnet": {"advanced_simd_8": {"unfused": 9000.0, "fused": 8000.0}},
+    })
+    prev["networks"]["alexnet"]["rows"][0]["fused_groups"] = ["conv5+pool5"]
+    cur = _bench({
+        "alexnet": {"advanced_simd_8": {"unfused": 9000.0, "fused": 7000.0}},
+    })
+    cur["networks"]["alexnet"]["rows"][0]["fused_groups"] = [
+        "conv3+conv4+conv5+pool5"]
+    cur["networks"]["alexnet"]["rows"][0]["fused_geometry"] = [
+        {"group": "conv3+conv4+conv5+pool5", "convs": 3,
+         "rows_per_cell": 2, "n_tiles": 3, "out_hw": [6, 6]},
+    ]
+    changes = bench_compare.group_changes(prev, cur)
+    assert changes == ["- `alexnet/advanced_simd_8` fused groups: "
+                       "conv5+pool5 → conv3+conv4+conv5+pool5"]
+    geo = bench_compare.render_geometry(cur)
+    assert "conv3+conv4+conv5+pool5" in geo and "2 × 3" in geo
+    # an old-format file (no fused_geometry) renders to nothing, silently
+    assert bench_compare.render_geometry(prev) == ""
+    # end-to-end: the change is reported and the gate still passes
+    prev_p, cur_p = tmp_path / "prev.json", tmp_path / "cur.json"
+    prev_p.write_text(json.dumps(prev))
+    cur_p.write_text(json.dumps(cur))
+    assert bench_compare.main([str(prev_p), str(cur_p),
+                               "--fail-on-regress"]) == 0
+    out = capsys.readouterr().out
+    assert "Fused-group composition changes" in out
+    assert "Executed fusion geometry" in out
+
+
 def test_config_change_resets_baseline(tmp_path, capsys):
     """Different batch/iters/backend make us_per_call incomparable: the
     baseline resets (all rows 'new') instead of gating apples-to-oranges."""

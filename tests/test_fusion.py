@@ -30,7 +30,7 @@ SIMD = Method.ADVANCED_SIMD_8
     ("cifar10", [("conv1", "pool1"), ("conv2", "pool2"),
                  ("conv3", "pool3")]),
     ("alexnet", [("conv1", "pool1", "norm1"), ("conv2", "pool2", "norm2"),
-                 ("conv5", "pool5")]),
+                 ("conv3", "conv4", "conv5", "pool5")]),
 ])
 def test_planner_groups(net_name, expected):
     plan = plan_fusion(NETWORKS[net_name](), method_for=lambda n: SIMD)
@@ -41,8 +41,9 @@ def test_planner_preserves_ungrouped_layers():
     net = NETWORKS["alexnet"]()
     plan = plan_fusion(net, method_for=lambda n: SIMD)
     kinds = [it.kind for it in plan]
-    # conv3/conv4 have no following pool: they stay per-layer
-    assert kinds.count("conv") == 2 and kinds.count("fused") == 3
+    # conv3/conv4 join the conv5+pool5 group as a chain: no conv is left
+    # on the per-layer ladder
+    assert kinds.count("conv") == 0 and kinds.count("fused") == 3
     assert kinds.count("lrn") == 0  # both pool→norm tails absorbed
     # every original layer is accounted for exactly once
     covered = [n for it in plan

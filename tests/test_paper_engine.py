@@ -69,6 +69,61 @@ def test_deploy_detects_corruption(tmp_path, net_and_params):
         load_model(tmp_path / "m")
 
 
+def test_deploy_detects_dtype_corruption(tmp_path, net_and_params):
+    """A weights.npz re-saved at a different dtype — with the checksum
+    refreshed to match, so the integrity check alone cannot catch it —
+    must still be rejected against the manifest's recorded dtype."""
+    import hashlib
+    import json
+
+    import numpy as np
+
+    net, params, x, ref = net_and_params
+    save_model(tmp_path / "m", net, params)
+    net2, params2, _ = load_model(tmp_path / "m")  # round-trip still loads
+    data = dict(np.load(tmp_path / "m" / "weights.npz"))
+    key = sorted(data)[0]
+    data[key] = data[key].astype(np.float16)
+    np.savez(tmp_path / "m" / "weights.npz", **data)
+    digest = hashlib.sha256()
+    for k in sorted(data):
+        digest.update(k.encode())
+        digest.update(data[k].tobytes())
+    manifest = json.loads((tmp_path / "m" / "manifest.json").read_text())
+    manifest["weights_sha256"] = digest.hexdigest()
+    (tmp_path / "m" / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="dtype"):
+        load_model(tmp_path / "m")
+
+
+def test_fc_after_conv_without_flatten():
+    """An fc straight after a conv/pool (no flatten layer) must consume
+    the whole c*h*w activation — sizing it from the channel count alone
+    silently dropped the spatial extent."""
+    from repro.core.netdefs import LayerSpec, NetworkDef
+
+    def build(with_flatten):
+        mid = ((LayerSpec("flatten", "flatten"),) if with_flatten else ())
+        return NetworkDef("t", (3, 12, 12), 5, (
+            LayerSpec("conv", "c1", out_channels=6, kernel=(3, 3),
+                      relu=True),
+            LayerSpec("pool", "p1", kernel=(2, 2), stride=(2, 2)),
+            *mid,
+            LayerSpec("fc", "f1", out_channels=5),
+        ))
+
+    eng = CNNEngine(build(False), method=Method.SEQ_REF)
+    # conv 12->10, pool 10->5: the fc must see 6*5*5, not 6
+    assert eng._shapes["f1"] == (6 * 5 * 5, 5)
+    params = eng.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 12, 12), jnp.float32)
+    out = eng.forward(params, x)
+    assert out.shape == (2, 5)
+    # identical to the same net with an explicit flatten layer
+    ref = CNNEngine(build(True), method=Method.SEQ_REF).forward(params, x)
+    assert jnp.max(jnp.abs(out - ref)) == 0.0
+
+
 def test_alexnet_shapes():
     net = NETWORKS["alexnet"]()
     eng = CNNEngine(net, method=Method.ADVANCED_SIMD_8)

@@ -27,6 +27,24 @@ def _run(model, params, reqs, seed=0):
     return eng.run_until_drained()
 
 
+def test_oversized_prompt_rejected(model_and_params):
+    """A prompt with len >= max_len would overflow the slot's KV rows at
+    prefill (and _decode_step would then write past max_len): the engine
+    must reject it up front.  len == max_len - 1 is the last admissible
+    size (one row left for the first decode step)."""
+    model, params = model_and_params
+    eng = ServingEngine(model, params, max_batch=2, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(0, list(range(8)), max_new_tokens=1))
+    with pytest.raises(ValueError, match="max_len"):
+        eng._prefill_into_slot(0, Request(1, list(range(9)),
+                                          max_new_tokens=1))
+    # boundary: max_len - 1 tokens still admits (and finishes) cleanly
+    eng.submit(Request(2, list(range(7)), max_new_tokens=1))
+    done = eng.run_until_drained()
+    assert 2 in done and len(done[2]) >= 1
+
+
 def test_temperature_zero_is_deterministic(model_and_params):
     """Greedy requests must not depend on the engine's PRNG seed."""
     model, params = model_and_params

@@ -14,6 +14,13 @@ discarded, every current row reports as ``new``, and the gate passes —
 a deliberate config change resets the baseline instead of tripping (or
 masking) the regression check.
 
+Fused-group composition rides along: rows whose ``fused_groups`` changed
+between the two files are flagged (informational — a re-planned group,
+e.g. a conv run newly fused as a chain, is a feature, never a gate), and
+the current file's ``fused_geometry`` — each group's chain depth and the
+final-row band a Pallas cell resolves — is printed as its own table
+under the trend.
+
 Usage:
     python tools/bench_compare.py prev/BENCH_network.json BENCH_network.json \
         --max-regress-pct 25 [--fail-on-regress]
@@ -53,6 +60,53 @@ def flatten(data: dict) -> FlatBench:
                     flat[(net, row["method"], variant)] = (
                         row[variant]["us_per_call"])
     return flat
+
+
+def flatten_groups(data: dict) -> Dict[Tuple[str, str], List[str]]:
+    """``BENCH_network.json`` -> {(network, method): fused_groups}."""
+    out: Dict[Tuple[str, str], List[str]] = {}
+    for net, nd in data.get("networks", {}).items():
+        for row in nd.get("rows", []):
+            if "fused_groups" in row:
+                out[(net, row["method"])] = row["fused_groups"]
+    return out
+
+
+def group_changes(prev: dict, cur: dict) -> List[str]:
+    """Per-(network, method) fused-group composition diffs — purely
+    informational (a re-planned group never gates)."""
+    pg, cg = flatten_groups(prev), flatten_groups(cur)
+    lines = []
+    for key in sorted(set(pg) | set(cg)):
+        if pg.get(key) != cg.get(key):
+            net, method = key
+            old = ", ".join(pg[key]) if key in pg else "—"
+            new = ", ".join(cg[key]) if key in cg else "—"
+            lines.append(f"- `{net}/{method}` fused groups: {old} → {new}")
+    return lines
+
+
+def render_geometry(data: dict) -> str:
+    """The current file's executed chain geometry, as its own markdown
+    table (empty string when no row carries ``fused_geometry`` — older
+    artifacts stay renderable)."""
+    lines = []
+    for net, nd in data.get("networks", {}).items():
+        for row in nd.get("rows", []):
+            for g in row.get("fused_geometry", []):
+                lines.append(
+                    f"| {net} | {row['method']} | {g['group']} | "
+                    f"{g['convs']} | {g['rows_per_cell']} × {g['n_tiles']} | "
+                    f"{g['out_hw'][0]}×{g['out_hw'][1]} |")
+    if not lines:
+        return ""
+    return "\n".join([
+        "### Executed fusion geometry (current run)",
+        "",
+        "| network | method | group | convs | rows/cell × tiles | out hw |",
+        "|---|---|---|---:|---:|---|",
+        *lines,
+    ]) + "\n"
 
 
 def compare(prev: FlatBench, cur: FlatBench,
@@ -130,6 +184,15 @@ def main(argv=None) -> int:
         prev = {}
     rows = compare(flatten(prev), flatten(cur), args.max_regress_pct)
     print(render_markdown(rows, args.max_regress_pct, note))
+    # no composition diff against a reset/absent baseline — every row
+    # would list as "— → …" when nothing was actually re-planned
+    changes = group_changes(prev, cur) if prev.get("networks") else []
+    if changes:
+        print("### Fused-group composition changes (informational)\n")
+        print("\n".join(changes) + "\n")
+    geometry = render_geometry(cur)
+    if geometry:
+        print(geometry)
     regressed = [r for r in rows if r["status"] == "regressed"]
     for r in regressed:
         print(f"::warning::bench regression: {r['network']}/{r['method']}"

@@ -9,10 +9,13 @@ Prints ``name,us_per_call,derived`` CSV (assignment contract):
   * roofline             — §Roofline terms from the dry-run artifacts
                            (rows appear when results/dryrun/ is populated)
 
-``--json`` switches to the machine-readable path: only the network ladder
-runs, and its per-network, per-method fused-vs-unfused numbers
-(us_per_call, FPS, fused_speedup) are written to ``BENCH_network.json``
-so the perf trajectory is recorded across PRs.
+``--json`` switches to the machine-readable path: the network ladder
+runs, its per-network, per-method fused-vs-unfused numbers (us_per_call,
+FPS, fused_speedup) are written to ``BENCH_network.json``, and batched
+CNN-serving rows (``CNNServer`` throughput + p50/p95 latency at request
+batches 1/8/16, ``--serving-batches``/``--serving-requests``;
+``--no-serving`` skips) ride along under each network's ``serving`` key
+so the perf trajectory records serving-scale numbers across PRs.
 """
 from __future__ import annotations
 
@@ -25,6 +28,7 @@ import traceback
 def _run_csv() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (  # noqa: E402
+        bench_cnn_serving,
         bench_conv_ladder,
         bench_network_ladder,
         bench_fc_fused,
@@ -36,6 +40,7 @@ def _run_csv() -> None:
         ("network_ladder", bench_network_ladder.run),
         ("fc_fused", bench_fc_fused.run),
         ("serving", bench_serving.run),
+        ("cnn_serving", bench_cnn_serving.run),
     ]
     for name, fn in suites:
         try:
@@ -64,10 +69,14 @@ def _run_csv() -> None:
         print(f"roofline,SKIPPED,\"{e}\"", flush=True)
 
 
-def _run_json(nets, out_path: str, batch: int, iters: int) -> None:
-    from benchmarks import bench_network_ladder
+def _run_json(nets, out_path: str, batch: int, iters: int,
+              serving_batches, serving_requests: int) -> None:
+    from benchmarks import bench_cnn_serving, bench_network_ladder
 
     data = bench_network_ladder.run_json(nets=nets, batch=batch, iters=iters)
+    if serving_batches:
+        bench_cnn_serving.add_serving_rows(
+            data, nets, batches=serving_batches, requests=serving_requests)
     with open(out_path, "w") as f:
         json.dump(data, f, indent=2)
     print(f"wrote {out_path}", flush=True)
@@ -78,6 +87,11 @@ def _run_json(nets, out_path: str, batch: int, iters: int) -> None:
                   f"unfused={row['unfused']['us_per_call']:.0f}us"
                   + (f" fused={row['fused']['us_per_call']:.0f}us"
                      f" fused_vs_unfused={ratio:.2f}x" if ratio else ""),
+                  flush=True)
+        for srow in nd.get("serving", []):
+            print(f"  {name}/cnn_server/batch{srow['batch']}: "
+                  f"rps={srow['throughput_rps']:.1f} "
+                  f"p50={srow['p50_us']:.0f}us p95={srow['p95_us']:.0f}us",
                   flush=True)
 
 
@@ -91,10 +105,20 @@ def main(argv=None) -> None:
                     help="output path for --json")
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--serving-batches", default="1,8,16",
+                    help="comma-separated CNNServer max_batch sweep for the "
+                         "json path (batched-serving rows)")
+    ap.add_argument("--serving-requests", type=int, default=16,
+                    help="requests per serving row (after bucket warm-up)")
+    ap.add_argument("--no-serving", action="store_true",
+                    help="skip the batched-serving rows on the json path")
     args = ap.parse_args(argv)
     if args.json:
+        serving_batches = () if args.no_serving else tuple(
+            int(b) for b in args.serving_batches.split(",") if b.strip())
         _run_json(tuple(n.strip() for n in args.nets.split(",") if n.strip()),
-                  args.out, args.batch, args.iters)
+                  args.out, args.batch, args.iters,
+                  serving_batches, args.serving_requests)
     else:
         _run_csv()
 

@@ -1,30 +1,39 @@
 """The CNNdroid inference engine: forward-path executor with per-layer
 method selection (the paper's core deliverable).
 
-The engine owns:
-* parameter init / loading (via ``core.deploy`` — the Caffe→device path),
-* the forward executor with the execution-method ladder for conv/FC layers,
-* fused-activation scheduling (ReLU folded into the producing layer —
-  the TPU-native realization of the paper's Fig. 5 CPU/GPU overlap),
-* super-layer fusion: ``repro.core.fusion.plan_fusion`` groups runs of
-  consecutive convs plus an optional pool/LRN tail into single dispatches
-  (``fuse_pool``, on by default, with per-layer opt-outs via
-  ``per_layer_fuse``) so no intermediate of the run — conv chain bands,
-  the pooled band under an absorbed LRN — ever round-trips through HBM
-  (AlexNet's conv3→conv4→conv5+pool5 is one dispatch); a VMEM
-  working-set check keeps shapes whose floor cell cannot fit the budget
-  on the per-layer ladder, falling back to shorter chains first,
-* per-layer instrumentation used by the benchmark harness (``collect``
-  forces the un-fused per-layer path so every activation is observable).
+The engine compiles its network into the **ExecutionPlan IR**
+(``repro.core.plan``) once per fuse setting and executes it with a thin
+step loop — shape propagation, standalone-ReLU folding, super-layer
+fusion grouping (``repro.core.fusion.plan_fusion``), and per-layer
+method/``oh_block`` resolution all happen at ``compile_plan`` time, not
+per trace.  The engine owns:
 
-Pooling runs through the Pallas ``pool2d`` kernels when ``use_pallas`` is
-set, else as an XLA ``reduce_window``; LRN is a single channel-axis
-``reduce_window`` (fp32 accumulation).
+* parameter init / loading (via ``core.deploy`` — the Caffe→device path),
+* the compiled plans (memoized per fuse flag) and their jitted forwards,
+  including a **batch-bucketed jit cache**: ``forward_batched`` rounds a
+  request batch up to its power-of-two bucket, pads with zero frames,
+  runs the bucket's memoized jitted plan, and slices the real rows back
+  out — arbitrary batch sizes in ``1..max_batch`` cost at most
+  ``log2(max_batch)+1`` compilations instead of one per distinct size
+  (the paper's §6.2 deployment is batched frames; ``serving.cnn`` is
+  built on this path),
+* knob invalidation: assigning ``method`` / ``oh_block`` / ``fuse_pool``
+  / ``fuse_relu`` / ``use_pallas``, or mutating the ``per_layer_*``
+  maps, drops every memoized plan and jitted forward so the next call
+  re-compiles against the new configuration (the old behaviour —
+  silently serving the stale plan — was a bug),
+* per-layer instrumentation used by the benchmark harness (``collect``
+  forces the un-fused plan so every activation is observable).
+
+Execution semantics live in ``repro.core.plan``'s step executors:
+pooling runs through the Pallas ``pool2d`` kernels when ``use_pallas``
+is set, else as an XLA ``reduce_window``; LRN is a single channel-axis
+``reduce_window`` (fp32); fused groups dispatch to
+``methods.conv2d_pool_fused`` / ``conv2d_chain_fused``.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
 from functools import partial
 from typing import Dict, List, Optional, Tuple
 
@@ -32,50 +41,123 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fusion import FusedLayerSpec, layers_as_chain, plan_fusion
-from repro.core.methods import (
-    Method,
-    conv2d,
-    conv2d_chain_fused,
-    conv2d_pool_fused,
-    fc_fused,
-    fc_seq_ref,
+from repro.core.methods import Method, conv2d
+from repro.core.netdefs import NetworkDef
+from repro.core.plan import (  # noqa: F401  (_pool/_lrn re-exported: the
+    ExecutionPlan,             # executors moved to the plan IR but their
+    _lrn,                      # home here predates it)
+    _pool,
+    compile_plan,
+    infer_param_shapes,
 )
-from repro.core.netdefs import LayerSpec, NetworkDef
 
 
-def _pool(x, spec: LayerSpec, use_pallas: bool = False, relu: bool = False):
-    """VALID pooling; ``relu`` is the folded standalone activation (applied
-    on top of the spec's own)."""
-    do_relu = spec.relu or relu
-    if use_pallas:
-        from repro.kernels.pool2d import ops as pool_ops
+class _KnobDict(dict):
+    """A per-layer knob map that invalidates the owning engine's caches
+    on any mutation — ``eng.per_layer_fuse["conv1"] = False`` after a
+    forward must re-plan, not keep serving the memoized stale plan."""
 
-        return pool_ops.pool2d(x, spec.kernel, spec.stride, spec.pool_kind,
-                               relu=do_relu)
-    from repro.kernels.pool2d.ref import pool2d_ref
+    def __init__(self, on_change, data=None):
+        super().__init__(data or {})
+        self._on_change = on_change
 
-    return pool2d_ref(x, spec.kernel, spec.stride, spec.pool_kind,
-                      relu=do_relu)
+    def __setitem__(self, k, v):
+        # no-op writes don't invalidate: a loop idempotently re-asserting
+        # config must keep its warm jit caches
+        changed = k not in self or self[k] != v
+        super().__setitem__(k, v)
+        if changed:
+            self._on_change()
+
+    def __delitem__(self, k):
+        super().__delitem__(k)
+        self._on_change()
+
+    def update(self, *args, **kwargs):
+        before = dict(self)
+        super().update(*args, **kwargs)
+        if dict(self) != before:
+            self._on_change()
+
+    def __ior__(self, other):
+        # dict.__ior__ bypasses update(): |= must invalidate too
+        self.update(other)
+        return self
+
+    def setdefault(self, k, default=None):
+        if k in self:  # pure read
+            return self[k]
+        super().__setitem__(k, default)
+        self._on_change()
+        return default
+
+    def pop(self, *args):
+        out = super().pop(*args)
+        self._on_change()
+        return out
+
+    def popitem(self):
+        out = super().popitem()
+        self._on_change()
+        return out
+
+    def clear(self):
+        super().clear()
+        self._on_change()
 
 
-def _lrn(x, spec: LayerSpec):
-    """Local response normalization across channels (AlexNet-style): one
-    channel-axis ``reduce_window`` (fp32) instead of ``lrn_n`` slice+adds."""
-    sq = x.astype(jnp.float32) ** 2
-    n = spec.lrn_n
-    # window [c - n//2, c + (n-1)//2]: asymmetric padding keeps the output
-    # at C channels for even n too (symmetric pad would yield C+1)
-    acc = jax.lax.reduce_window(
-        sq, 0.0, jax.lax.add, (1, n, 1, 1), (1, 1, 1, 1),
-        ((0, 0), (n // 2, n - 1 - n // 2), (0, 0), (0, 0)),
-    )
-    denom = (spec.lrn_k + spec.lrn_alpha * acc) ** spec.lrn_beta
-    return (x.astype(jnp.float32) / denom).astype(x.dtype)
+_UNSET = object()
+
+
+def _knob(name: str):
+    """A config property whose assignment drops the memoized plans and
+    jitted forwards (mutating engine config used to silently keep
+    serving the stale plan).  Re-assigning the current value is a no-op:
+    warm caches survive idempotent config re-assertion."""
+    attr = "_" + name
+
+    def get(self):
+        return getattr(self, attr)
+
+    def set_(self, value):
+        cur = getattr(self, attr, _UNSET)
+        if cur is not _UNSET and (cur is value or cur == value):
+            return
+        setattr(self, attr, value)
+        self.clear_caches()
+
+    return property(get, set_)
+
+
+def _dict_knob(name: str):
+    """A per-layer map knob: reassignment re-wraps into a ``_KnobDict``
+    (invalidating only on a real content change); in-place mutation
+    invalidates via the wrapper."""
+    attr = "_" + name
+
+    def get(self):
+        return getattr(self, attr)
+
+    def set_(self, value):
+        changed = dict(getattr(self, attr, {})) != dict(value or {})
+        setattr(self, attr, _KnobDict(self.clear_caches, value))
+        if changed:
+            self.clear_caches()
+
+    return property(get, set_)
 
 
 class CNNEngine:
     """Forward-path executor for a trained CNN."""
+
+    method = _knob("method")
+    use_pallas = _knob("use_pallas")
+    fuse_relu = _knob("fuse_relu")
+    fuse_pool = _knob("fuse_pool")
+    oh_block = _knob("oh_block")
+    per_layer_methods = _dict_knob("per_layer_methods")
+    per_layer_oh_blocks = _dict_knob("per_layer_oh_blocks")
+    per_layer_fuse = _dict_knob("per_layer_fuse")
 
     def __init__(self, net: NetworkDef, method: Method = Method.ADVANCED_SIMD_8,
                  use_pallas: bool = False, fuse_relu: bool = True,
@@ -85,6 +167,15 @@ class CNNEngine:
                  fuse_pool: bool = True,
                  per_layer_fuse: Optional[Dict[str, bool]] = None):
         self.net = net
+        # plan + jit caches (created first: the knob setters below clear
+        # them on every assignment, including these initial ones)
+        self._plans: Dict[bool, ExecutionPlan] = {}
+        self._jit_cache: Dict[bool, "jax.stages.Wrapped"] = {}
+        # batch-bucketed jits: (fuse, bucket) -> jitted forward.  Each
+        # bucket jit only ever sees ONE batch shape (inputs are padded up
+        # to the bucket), so len(_bucket_jits) IS the compile count.
+        self._bucket_jits: Dict[Tuple[bool, int], "jax.stages.Wrapped"] = {}
+        self._bucket_compiles = 0
         self.method = method
         self.use_pallas = use_pallas
         self.fuse_relu = fuse_relu
@@ -99,48 +190,18 @@ class CNNEngine:
         # mirroring per_layer_methods
         self.fuse_pool = fuse_pool
         self.per_layer_fuse = per_layer_fuse or {}
-        self._shapes = self._infer_shapes()
-        # plan + jit caches (keyed by fuse setting).  Engine config is
-        # treated as fixed once forward has run — call clear_caches()
-        # after mutating method/fuse/oh_block attributes in place.
-        self._plans: Dict[bool, list] = {}
-        self._jit_cache: Dict[bool, "jax.stages.Wrapped"] = {}
+        self._shapes = infer_param_shapes(net)
 
     def clear_caches(self) -> None:
-        """Drop the memoized fusion plans and jitted forwards (call after
-        mutating engine configuration in place)."""
+        """Drop the memoized execution plans and every jitted forward
+        (per-fuse and batch-bucketed).  Called automatically by the knob
+        setters; only direct mutation of private state needs it by hand."""
         self._plans.clear()
         self._jit_cache.clear()
+        self._bucket_jits.clear()
+        self._bucket_compiles = 0  # the count tracks the live cache
 
     # -- parameters -----------------------------------------------------------
-    def _infer_shapes(self) -> Dict[str, Tuple]:
-        """Propagate shapes through the net to size conv/fc parameters."""
-        c, h, w = self.net.input_shape
-        shapes: Dict[str, Tuple] = {}
-        flat: Optional[int] = None
-        for spec in self.net.layers:
-            if spec.kind == "conv":
-                kh, kw = spec.kernel
-                shapes[spec.name] = (spec.out_channels, c, kh, kw)
-                h = (h + 2 * spec.padding[0] - kh) // spec.stride[0] + 1
-                w = (w + 2 * spec.padding[1] - kw) // spec.stride[1] + 1
-                c = spec.out_channels
-            elif spec.kind == "pool":
-                kh, kw = spec.kernel
-                h = (h - kh) // spec.stride[0] + 1
-                w = (w - kw) // spec.stride[1] + 1
-            elif spec.kind == "flatten":
-                flat = c * h * w
-            elif spec.kind == "fc":
-                # an fc straight after a conv/pool (no flatten layer)
-                # consumes the WHOLE activation — c*h*w, not just the
-                # channel count (which silently dropped the spatial
-                # extent); forward() flattens implicitly to match
-                d_in = flat if flat is not None else c * h * w
-                shapes[spec.name] = (d_in, spec.out_channels)
-                flat = spec.out_channels
-        return shapes
-
     def init(self, key) -> Dict[str, Dict[str, jnp.ndarray]]:
         params = {}
         for spec in self.net.layers:
@@ -165,121 +226,38 @@ class CNNEngine:
         return params
 
     # -- forward ----------------------------------------------------------------
-    def _method_for(self, name: str) -> Method:
-        return self.per_layer_methods.get(name, self.method)
-
     def _oh_block_for(self, name: str) -> Optional[int]:
         return self.per_layer_oh_blocks.get(name, self.oh_block)
 
-    def plan(self, fuse: Optional[bool] = None) -> list:
-        """The execution plan: the layer list with conv[+relu][+pool] runs
-        replaced by ``FusedLayerSpec`` groups when fusion is on."""
+    def plan(self, fuse: Optional[bool] = None) -> ExecutionPlan:
+        """The compiled ``ExecutionPlan`` for this engine configuration,
+        memoized per fuse flag (iterating it yields the layer/group
+        items, so ``fusion_summary(eng.plan(True))`` keeps working)."""
         use_fuse = self.fuse_pool if fuse is None else bool(fuse)
         if use_fuse not in self._plans:
-            if use_fuse:
-                no = frozenset(n for n, v in self.per_layer_fuse.items()
-                               if not v)
-                # the VMEM working-set check only binds on the Pallas
-                # path; the XLA analogue fuses regardless of cell size
-                self._plans[True] = plan_fusion(
-                    self.net, method_for=self._method_for, no_fuse=no,
-                    fuse_relu=self.fuse_relu, vmem_check=self.use_pallas)
-            else:
-                self._plans[False] = list(self.net.layers)
+            # the VMEM working-set check only binds on the Pallas path;
+            # the XLA analogue fuses regardless of cell size
+            self._plans[use_fuse] = compile_plan(
+                self.net, method=self.method,
+                per_layer_methods=self.per_layer_methods,
+                oh_block=self.oh_block,
+                per_layer_oh_blocks=self.per_layer_oh_blocks,
+                fuse=use_fuse, fuse_relu=self.fuse_relu,
+                per_layer_fuse=self.per_layer_fuse,
+                use_pallas=self.use_pallas)
         return self._plans[use_fuse]
 
     def forward(self, params, x, collect: Optional[dict] = None,
                 fuse: Optional[bool] = None):
         """x: [N, C, H, W] (a batch of frames, paper §4).  ``collect``
         (optional dict) receives per-layer outputs for inspection — it
-        forces the un-fused per-layer path so every activation exists.
-        ``fuse`` overrides the engine-level ``fuse_pool`` for this call."""
+        forces the un-fused plan so every activation exists.  ``fuse``
+        overrides the engine-level ``fuse_pool`` for this call.  All
+        fusion/folding decisions were made at ``compile_plan`` time;
+        this is a thin loop of step executors."""
         if collect is not None:
             fuse = False  # instrumentation needs every per-layer output
-        items = self.plan(fuse)
-        i = 0
-        while i < len(items):
-            spec = items[i]
-            if isinstance(spec, FusedLayerSpec):
-                # super-layer: one dispatch; no intermediate of the run
-                # (conv chain bands, pooled band under an absorbed LRN)
-                # ever lands in HBM
-                lrn = spec.lrn
-                lrn_kw = dict(
-                    lrn_n=lrn.lrn_n if lrn is not None else None,
-                    lrn_alpha=lrn.lrn_alpha if lrn is not None else 1e-4,
-                    lrn_beta=lrn.lrn_beta if lrn is not None else 0.75,
-                    lrn_k=lrn.lrn_k if lrn is not None else 1.0)
-                method = self._method_for(spec.conv.name)
-                # a chain cell's band is defined in FINAL-stage rows, so
-                # the last conv's oh_block override is the one that maps
-                # onto it (overrides on earlier chain members have no
-                # per-stage band to bind to)
-                ohb = self._oh_block_for(spec.convs[-1].name)
-                if len(spec.convs) == 1:
-                    # single conv + pool: the oc-blocked epilogue kernel
-                    p = params[spec.conv.name]
-                    x = conv2d_pool_fused(
-                        x, p["w"], p["b"], method, spec.conv.stride,
-                        spec.conv.padding, spec.relu, spec.pool.kernel,
-                        spec.pool.stride, spec.pool.pool_kind,
-                        spec.pool_relu, self.use_pallas, ohb, **lrn_kw)
-                else:
-                    # conv chain (optional pool/LRN tail): the full-width
-                    # chain cell, VMEM-resident halo between stages
-                    pool = spec.pool
-                    x = conv2d_chain_fused(
-                        x, tuple(params[cv.name]["w"] for cv in spec.convs),
-                        tuple(params[cv.name]["b"] for cv in spec.convs),
-                        method, tuple(cv.stride for cv in spec.convs),
-                        tuple(cv.padding for cv in spec.convs), spec.relus,
-                        pool_kernel=pool.kernel if pool is not None else None,
-                        pool_stride=pool.stride if pool is not None else None,
-                        pool_kind=(pool.pool_kind if pool is not None
-                                   else "max"),
-                        pool_relu=spec.pool_relu,
-                        use_pallas=self.use_pallas, oh_block=ohb, **lrn_kw)
-                i += 1
-                continue
-            # fused-activation scheduling: a standalone relu following a
-            # conv/fc/pool is folded into that layer's epilogue
-            fused_relu = spec.relu
-            if (self.fuse_relu and i + 1 < len(items)
-                    and items[i + 1].kind == "relu"
-                    and spec.kind in ("conv", "fc", "pool")):
-                fused_relu = True
-            if spec.kind == "conv":
-                p = params[spec.name]
-                x = conv2d(x, p["w"], p["b"], self._method_for(spec.name),
-                           spec.stride, spec.padding, fused_relu,
-                           self.use_pallas, self._oh_block_for(spec.name))
-            elif spec.kind == "pool":
-                x = _pool(x, spec, self.use_pallas, relu=fused_relu)
-            elif spec.kind == "lrn":
-                x = _lrn(x, spec)
-            elif spec.kind == "flatten":
-                x = x.reshape(x.shape[0], -1)
-            elif spec.kind == "fc":
-                if x.ndim > 2:  # fc after conv/pool without a flatten
-                    x = x.reshape(x.shape[0], -1)
-                p = params[spec.name]
-                if self._method_for(spec.name) == Method.SEQ_REF:
-                    x = fc_seq_ref(x, p["w"], p["b"], fused_relu)
-                else:
-                    x = fc_fused(x, p["w"], p["b"], fused_relu,
-                                 self.use_pallas)
-            elif spec.kind == "relu":
-                if not (self.fuse_relu and i > 0
-                        and items[i - 1].kind in ("conv", "fc", "pool")):
-                    x = jnp.maximum(x, 0.0)
-            elif spec.kind == "softmax":
-                x = jax.nn.softmax(x.astype(jnp.float32), axis=-1)
-            else:
-                raise ValueError(spec.kind)
-            if collect is not None:
-                collect[spec.name] = x
-            i += 1
-        return x
+        return self.plan(fuse).execute(params, x, collect=collect)
 
     def jit_forward(self, fuse: Optional[bool] = None):
         """The jitted forward, memoized per fuse setting — repeated calls
@@ -290,67 +268,56 @@ class CNNEngine:
                 partial(self.forward, fuse=key))
         return self._jit_cache[key]
 
+    # -- batch-bucketed forward (serving path) --------------------------------
+    @staticmethod
+    def batch_bucket(n: int) -> int:
+        """The power-of-two bucket a batch of ``n`` requests rounds up
+        to: every batch size in ``1..max_batch`` lands in one of the
+        ``log2(max_batch)+1`` buckets ``{1, 2, 4, ..., max_batch}``."""
+        if n < 1:
+            raise ValueError(f"batch must be >= 1, got {n}")
+        return 1 << (int(n) - 1).bit_length()
+
+    def _bucket_jit(self, fuse: bool, bucket: int):
+        key = (fuse, bucket)
+        if key not in self._bucket_jits:
+            self._bucket_jits[key] = jax.jit(partial(self.forward, fuse=fuse))
+            self._bucket_compiles += 1
+        return self._bucket_jits[key]
+
+    def forward_batched(self, params, x, fuse: Optional[bool] = None):
+        """``forward`` through the batch-bucketed jit cache: pad the
+        batch up to its power-of-two bucket with zero frames, run the
+        bucket's memoized jitted plan, slice the real rows back out.
+        Arbitrary request batch sizes hit at most ``log2(max_batch)+1``
+        compiled variants — the steady-state serving path (``CNNServer``)
+        never recompiles once its buckets are warm."""
+        use_fuse = self.fuse_pool if fuse is None else bool(fuse)
+        n = x.shape[0]
+        bucket = self.batch_bucket(n)
+        fn = self._bucket_jit(use_fuse, bucket)
+        if bucket != n:
+            pad = jnp.zeros((bucket - n, *x.shape[1:]), x.dtype)
+            x = jnp.concatenate([x, pad], axis=0)
+        return fn(params, x)[:n]
+
+    def bucket_stats(self) -> dict:
+        """Bucketed-jit cache introspection: the live (fuse, bucket)
+        keys and the total number of bucket compilations this engine has
+        paid (monotone until ``clear_caches`` — the compile-count tests
+        assert repeat batch sizes within a bucket add nothing)."""
+        return {"buckets": sorted(self._bucket_jits),
+                "compiles": self._bucket_compiles}
+
     # -- instrumentation ----------------------------------------------------------
     def fusion_report(self, fuse: Optional[bool] = None) -> List[dict]:
-        """Executed geometry of every fused group in the plan: the layer
-        names covered, the chain depth (``convs``), the group's output
-        spatial size, and the final-row band the Pallas cell resolves —
-        ``rows_per_cell`` pooled/final rows per grid cell × ``n_tiles``
-        bands per frame (the XLA analogue runs each group as one
-        un-banded pass; the banding reported is the Pallas path's).
-        Shares ``kernels.resolve_ph_block``/``resolve_chain_block`` with
-        the kernels themselves, so the report IS what a Pallas run would
-        execute."""
-        from repro.core.fusion import _conv_out_hw, _pool_out_hw
-        from repro.kernels.conv2d import kernels as K
-        from repro.kernels.conv2d.ops import SUBLANES
-
-        report = []
-        c, h, w = self.net.input_shape
-        for it in self.plan(fuse):
-            if not isinstance(it, FusedLayerSpec):
-                if it.kind == "conv":
-                    h, w = _conv_out_hw(h, w, it)
-                    c = it.out_channels
-                elif it.kind == "pool":
-                    h, w = _pool_out_hw(h, w, it)
-                continue
-            method = self._method_for(it.conv.name)
-            im2col = method in (Method.ADVANCED_SIMD_4,
-                                Method.ADVANCED_SIMD_8)
-            cp = -(-c // SUBLANES) * SUBLANES
-            ohb = self._oh_block_for(it.convs[-1].name)
-            pool_t = (None if it.pool is None else
-                      (it.pool.kernel[0], it.pool.kernel[1],
-                       it.pool.stride[0], it.pool.stride[1]))
-            if len(it.convs) == 1:
-                # single conv + pool: the oc-blocked epilogue kernel
-                cv = it.convs[0]
-                oh, ow = _conv_out_hw(h, w, cv)
-                wp = w + 2 * cv.padding[1]
-                oc = cv.out_channels
-                if not im2col or it.lrn is not None:
-                    ocb = oc  # basic_simd / LRN tail: full oc width
-                else:
-                    ocb = min(4 if method == Method.ADVANCED_SIMD_4 else 8,
-                              oc)
-                ph = (oh - pool_t[0]) // pool_t[2] + 1
-                blk, n_tiles = K.resolve_ph_block(
-                    ph, oh, ow, wp, cp, cv.kernel[0], cv.kernel[1],
-                    cv.stride[0], ocb, pool_t, ohb, im2col=im2col)
-            else:
-                chain, ocs = layers_as_chain(it.convs)
-                blk, n_tiles = K.resolve_chain_block(
-                    h, w, cp, chain, ocs, pool_t, ohb, im2col=im2col)
-            for cv in it.convs:
-                h, w = _conv_out_hw(h, w, cv)
-            c = it.convs[-1].out_channels
-            if it.pool is not None:
-                h, w = _pool_out_hw(h, w, it.pool)
-            report.append({"group": it.name, "convs": len(it.convs),
-                           "rows_per_cell": blk, "n_tiles": n_tiles,
-                           "out_hw": [h, w]})
-        return report
+        """Executed geometry of every fused group — read straight off the
+        compiled plan's steps (each carries its resolved input shape,
+        method, and band override): the layer names covered, the chain
+        depth (``convs``), the group's output spatial size, and the
+        final-row band the Pallas cell resolves (``rows_per_cell`` ×
+        ``n_tiles``; the XLA analogue runs each group un-banded)."""
+        return self.plan(fuse).fusion_report()
 
     def time_forward(self, params, x, iters: int = 3,
                      fuse: Optional[bool] = None) -> float:
@@ -368,7 +335,6 @@ class CNNEngine:
         acts: dict = {}
         self.forward(params, x, collect=acts)
         cur = x
-        c, h, w = self.net.input_shape
         for spec in self.net.layers:
             if spec.kind == "conv":
                 oc, ic, kh, kw = self._shapes[spec.name]

@@ -345,3 +345,49 @@ def _fits_vmem(convs, pool, method, cin, h_in, w_in, with_lrn,
 def fusion_summary(plan: Iterable[PlanItem]) -> List[Tuple[str, ...]]:
     """The fused groups in a plan, as tuples of original layer names."""
     return [it.names for it in plan if isinstance(it, FusedLayerSpec)]
+
+
+def group_geometry(group: FusedLayerSpec, method: Method,
+                   in_shape: Tuple[int, int, int],
+                   oh_block: Optional[int]) -> dict:
+    """The executed geometry of one fused group: the final-row band the
+    Pallas cell resolves (``rows_per_cell`` pooled/final rows per grid
+    cell × ``n_tiles`` bands per frame) plus the group's output spatial
+    size.  Shares ``kernels.resolve_ph_block``/``resolve_chain_block``
+    with the kernels themselves, so the report IS what a Pallas run
+    would execute (the XLA analogue runs each group as one un-banded
+    pass).  ``in_shape`` is the ``(C, H, W)`` activation entering the
+    group — the plan IR carries it pre-resolved on each fused step."""
+    from repro.kernels.conv2d import kernels as K
+    from repro.kernels.conv2d.ops import SUBLANES
+
+    c, h, w = in_shape
+    im2col = method in IM2COL_METHODS
+    cp = -(-c // SUBLANES) * SUBLANES
+    pool_t = (None if group.pool is None else
+              (group.pool.kernel[0], group.pool.kernel[1],
+               group.pool.stride[0], group.pool.stride[1]))
+    if len(group.convs) == 1:
+        # single conv + pool: the oc-blocked epilogue kernel
+        cv = group.convs[0]
+        oh, ow = _conv_out_hw(h, w, cv)
+        wp = w + 2 * cv.padding[1]
+        oc = cv.out_channels
+        if not im2col or group.lrn is not None:
+            ocb = oc  # basic_simd / LRN tail: full oc width
+        else:
+            ocb = min(_ADVANCED_OC_BLOCK[method], oc)
+        ph = (oh - pool_t[0]) // pool_t[2] + 1
+        blk, n_tiles = K.resolve_ph_block(
+            ph, oh, ow, wp, cp, cv.kernel[0], cv.kernel[1], cv.stride[0],
+            ocb, pool_t, oh_block, im2col=im2col)
+    else:
+        chain, ocs = layers_as_chain(group.convs)
+        blk, n_tiles = K.resolve_chain_block(h, w, cp, chain, ocs, pool_t,
+                                             oh_block, im2col=im2col)
+    for cv in group.convs:
+        h, w = _conv_out_hw(h, w, cv)
+    if group.pool is not None:
+        h, w = _pool_out_hw(h, w, group.pool)
+    return {"group": group.name, "convs": len(group.convs),
+            "rows_per_cell": blk, "n_tiles": n_tiles, "out_hw": [h, w]}

@@ -52,6 +52,20 @@ LADDER = (
 )
 
 
+def pallas_method_name(method: Method, what: str = "fused super-layer") -> str:
+    """The ``kernels.conv2d`` method-name string for a fusable SIMD
+    ``Method`` — the shared gate of both fused entry points (the planner
+    keeps ``seq_ref``/``basic_parallel`` on the per-layer ladder, so a
+    non-SIMD method reaching a fused dispatch is a caller bug)."""
+    if method == Method.BASIC_SIMD:
+        return "basic_simd"
+    if method == Method.ADVANCED_SIMD_4:
+        return "advanced_simd_4"
+    if method == Method.ADVANCED_SIMD_8:
+        return "advanced_simd_8"
+    raise ValueError(f"{what} requires a SIMD method: {method}")
+
+
 def _out_size(size: int, k: int, stride: int, pad: int) -> int:
     return (size + 2 * pad - k) // stride + 1
 
@@ -266,12 +280,7 @@ def conv2d_pool_fused(x, w, b, method: "Method", stride=(1, 1),
     matches ``engine._lrn`` exactly, including the asymmetric window
     padding for even ``lrn_n``.
     """
-    if method == Method.BASIC_SIMD:
-        pallas_method = "basic_simd"
-    elif method in (Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8):
-        pallas_method = f"advanced_simd_{4 if method == Method.ADVANCED_SIMD_4 else 8}"
-    else:
-        raise ValueError(f"fused super-layer requires a SIMD method: {method}")
+    pallas_method = pallas_method_name(method)
     if use_pallas:
         from repro.kernels.conv2d import ops as conv_ops
 
@@ -349,12 +358,7 @@ def conv2d_chain_fused(x, ws, bs, method: "Method", strides, paddings,
     the run instead of one per layer), with the same optional
     pool/``lrn_n`` tail as ``conv2d_pool_fused``.
     """
-    if method == Method.BASIC_SIMD:
-        pallas_method = "basic_simd"
-    elif method in (Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8):
-        pallas_method = f"advanced_simd_{4 if method == Method.ADVANCED_SIMD_4 else 8}"
-    else:
-        raise ValueError(f"fused conv chain requires a SIMD method: {method}")
+    pallas_method = pallas_method_name(method, what="fused conv chain")
     if lrn_n is not None and pool_kernel is None:
         raise ValueError("fused LRN epilogue requires a fused pool epilogue")
     if use_pallas:

@@ -1,3 +1,5 @@
+from repro.serving.cnn import CNNServer, ImageRequest, ImageResult
 from repro.serving.engine import Request, ServingEngine
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["CNNServer", "ImageRequest", "ImageResult", "Request",
+           "ServingEngine"]

@@ -1,0 +1,187 @@
+"""Batched CNN serving front-end — the paper's actual deployment
+scenario (forward-only classification of incoming frames, §6.2 runs
+batches of 16), complementing the token-shaped ``ServingEngine``.
+
+``CNNServer`` queues per-image classification requests and serves them
+in **dynamic batches**:
+
+* ``submit`` enqueues an ``ImageRequest`` (one ``[C, H, W]`` frame) with
+  its arrival timestamp;
+* ``step`` forms at most one batch: it flushes when ``max_batch``
+  requests are waiting OR the oldest request has aged past
+  ``max_delay_s`` (the deadline — a lone request never waits forever),
+  taking the oldest ``max_batch`` requests FIFO;
+* the batch runs through the engine's **batch-bucketed jit cache**
+  (``CNNEngine.forward_batched``: pad up to the power-of-two bucket,
+  run the memoized jitted plan, slice the real rows back out), so a
+  ragged flush of 5 frames reuses the bucket-8 compilation instead of
+  paying a fresh trace;
+* each request resolves to an ``ImageResult`` with its top-k classes
+  and probabilities plus the submit→complete latency and the dynamic
+  batch it rode in.
+
+``stats()`` reports the serving-scale numbers the benchmarks record:
+requests served, batches formed, mean batch size, p50/p95 latency, and
+throughput over the server's busy time.  The clock is injectable so
+deadline behaviour is testable without real sleeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import CNNEngine
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    """One classification request: a single ``[C, H, W]`` frame."""
+    rid: int
+    image: "np.ndarray"
+    top_k: int = 5
+
+
+@dataclasses.dataclass
+class ImageResult:
+    """Top-k classes (descending probability) plus serving metadata."""
+    rid: int
+    top_indices: List[int]
+    top_probs: List[float]
+    latency_s: float      # submit -> result available
+    batch_size: int       # real requests in the dynamic batch it rode in
+    bucket: int           # the padded power-of-two bucket that executed
+
+
+class CNNServer:
+    """Dynamic-batching front-end over a ``CNNEngine``.
+
+    The server is step-driven (no background threads): callers submit
+    requests, then drive ``step()`` — each call serves at most one
+    dynamic batch — or ``run_until_drained()``.  Batches never mix
+    configurations: the engine's plan and the ``fuse`` flag are fixed
+    per server.
+    """
+
+    def __init__(self, engine: CNNEngine, params, *, max_batch: int = 16,
+                 max_delay_s: float = 2e-3, fuse: Optional[bool] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_delay_s < 0:
+            raise ValueError(f"max_delay_s must be >= 0, got {max_delay_s}")
+        self.engine = engine
+        self.params = params
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self.fuse = fuse
+        self.clock = clock
+        self._input_shape = tuple(engine.net.input_shape)
+        self._pending: Deque[Tuple[ImageRequest, float]] = deque()
+        self.done: Dict[int, ImageResult] = {}
+        self.reset_stats()
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, req: ImageRequest) -> None:
+        """Enqueue one request (validated against the net's input shape);
+        it is served by a later ``step()``."""
+        img = np.asarray(req.image)
+        if tuple(img.shape) != self._input_shape:
+            raise ValueError(
+                f"request {req.rid}: image shape {tuple(img.shape)} does not "
+                f"match the network input {self._input_shape}")
+        self._pending.append((req, self.clock()))
+
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def pop_result(self, rid: int) -> Optional[ImageResult]:
+        """Retrieve-and-remove a finished request's result (None when not
+        done yet).  Long-lived servers should drain ``done`` through this
+        — results otherwise accumulate for the server's lifetime."""
+        return self.done.pop(rid, None)
+
+    # -- serving loop -----------------------------------------------------------
+    def _should_flush(self, force: bool) -> bool:
+        if not self._pending:
+            return False
+        if force or len(self._pending) >= self.max_batch:
+            return True
+        oldest_t = self._pending[0][1]
+        return (self.clock() - oldest_t) >= self.max_delay_s
+
+    def step(self, force: bool = False) -> List[ImageResult]:
+        """Serve at most one dynamic batch.  Flushes when a full
+        ``max_batch`` is waiting, the oldest request has exceeded the
+        ``max_delay_s`` deadline, or ``force`` is set; otherwise returns
+        ``[]`` and keeps queueing."""
+        if not self._should_flush(force):
+            return []
+        take = min(len(self._pending), self.max_batch)
+        batch = [self._pending.popleft() for _ in range(take)]
+        x = jnp.asarray(np.stack([np.asarray(r.image, np.float32)
+                                  for r, _ in batch]))
+        t0 = self.clock()
+        probs = self.engine.forward_batched(self.params, x, fuse=self.fuse)
+        probs = np.asarray(probs)  # blocks until the batch is done
+        t1 = self.clock()
+        self._busy_s += t1 - t0
+        self._batch_sizes.append(take)
+        bucket = CNNEngine.batch_bucket(take)
+        results = []
+        for i, (req, t_sub) in enumerate(batch):
+            p = probs[i]
+            k = max(1, min(req.top_k, p.shape[-1]))
+            top = np.argsort(-p, kind="stable")[:k]
+            res = ImageResult(
+                rid=req.rid, top_indices=[int(j) for j in top],
+                top_probs=[float(p[j]) for j in top],
+                latency_s=t1 - t_sub, batch_size=take, bucket=bucket)
+            self.done[req.rid] = res
+            self._latencies_s.append(res.latency_s)
+            results.append(res)
+        return results
+
+    def run_until_drained(self, max_steps: int = 10_000) -> Dict[int, ImageResult]:
+        """Serve everything queued (forcing ragged final batches rather
+        than waiting out the deadline) and return ``{rid: result}``."""
+        steps = 0
+        while self._pending and steps < max_steps:
+            self.step(force=True)
+            steps += 1
+        return self.done
+
+    # -- stats -----------------------------------------------------------------
+    def reset_stats(self) -> None:
+        """Zero the latency/throughput accumulators (results in ``done``
+        are kept; benches call this after warm-up so compile time never
+        pollutes the serving numbers)."""
+        self._latencies_s: List[float] = []
+        self._batch_sizes: List[int] = []
+        self._busy_s = 0.0
+
+    def stats(self) -> dict:
+        """Serving-scale numbers since the last ``reset_stats()``:
+        requests/batches served, mean batch size, p50/p95 submit→done
+        latency (us), and throughput (requests per second of server busy
+        time — queue idle time between steps is not charged)."""
+        served = len(self._latencies_s)
+        out = {
+            "served": served,
+            "batches": len(self._batch_sizes),
+            "mean_batch": (float(np.mean(self._batch_sizes))
+                           if self._batch_sizes else 0.0),
+            "busy_s": self._busy_s,
+            "buckets": self.engine.bucket_stats()["buckets"],
+        }
+        if served:
+            lat = np.asarray(self._latencies_s)
+            out["p50_latency_us"] = float(np.percentile(lat, 50) * 1e6)
+            out["p95_latency_us"] = float(np.percentile(lat, 95) * 1e6)
+            out["throughput_rps"] = (served / self._busy_s
+                                     if self._busy_s > 0 else float("inf"))
+        return out

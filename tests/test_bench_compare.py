@@ -136,6 +136,51 @@ def test_group_changes_and_geometry_reported_not_gated(tmp_path, capsys):
     assert "Executed fusion geometry" in out
 
 
+def _with_serving(bench, net, rows, config=None):
+    bench = json.loads(json.dumps(bench))  # deep copy
+    bench["networks"].setdefault(net, {"rows": []})["serving"] = [
+        {"batch": b, "throughput_rps": 100.0, "p50_us": p50,
+         "p95_us": p50 * 1.2, "mean_batch": float(b)} for b, p50 in rows]
+    bench["serving_config"] = config or {"batches": [b for b, _ in rows],
+                                         "requests": 16}
+    return bench
+
+
+def test_serving_rows_flattened_and_gated():
+    """CNNServer rows ride the same trend machinery: p50 per max_batch,
+    flattened under method 'cnn_server'."""
+    prev = _with_serving(PREV, "lenet5", [(1, 1000.0), (8, 4000.0)])
+    cur = _with_serving(PREV, "lenet5", [(1, 1000.0), (8, 6000.0)])
+    flat = bench_compare.flatten(cur)
+    assert flat[("lenet5", "cnn_server", "batch8")] == 6000.0
+    rows = bench_compare.compare(bench_compare.flatten(prev), flat, 25.0)
+    by = _by_key(rows)
+    assert by[("lenet5", "cnn_server", "batch1")]["status"] == "ok"
+    assert by[("lenet5", "cnn_server", "batch8")]["status"] == "regressed"
+
+
+def test_serving_config_change_resets_only_serving(tmp_path, capsys):
+    """A different serving sweep (requests/batches) resets the serving
+    baseline (rows 'new') while the ladder rows still compare — and an
+    old-format prev file (no serving rows at all) never gates."""
+    prev = _with_serving(PREV, "lenet5", [(8, 4000.0)],
+                         config={"batches": [8], "requests": 16})
+    cur = _with_serving(PREV, "lenet5", [(8, 9999.0)],
+                        config={"batches": [8], "requests": 64})
+    prev_p, cur_p = tmp_path / "prev.json", tmp_path / "cur.json"
+    prev_p.write_text(json.dumps(prev))
+    cur_p.write_text(json.dumps(cur))
+    assert bench_compare.main([str(prev_p), str(cur_p),
+                               "--fail-on-regress"]) == 0
+    out = capsys.readouterr().out
+    assert "serving config changed" in out
+    assert "| lenet5 | cnn_server | batch8 |" in out and "🆕 new" in out
+    # old-format prev (pre-serving artifact): rows are new, gate passes
+    prev_p.write_text(json.dumps(PREV))
+    assert bench_compare.main([str(prev_p), str(cur_p),
+                               "--fail-on-regress"]) == 0
+
+
 def test_config_change_resets_baseline(tmp_path, capsys):
     """Different batch/iters/backend make us_per_call incomparable: the
     baseline resets (all rows 'new') instead of gating apples-to-oranges."""

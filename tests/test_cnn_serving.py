@@ -1,0 +1,194 @@
+"""CNNServer end-to-end tests: queueing/FIFO dynamic batching, deadline
+flush (injectable clock), ragged-batch padding correctness through the
+bucketed jit cache, per-request output parity with the unbatched path,
+and the serving compile bound."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import CNNEngine
+from repro.core.methods import Method
+from repro.core.netdefs import NETWORKS
+from repro.serving.cnn import CNNServer, ImageRequest
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def lenet():
+    net = NETWORKS["lenet5"]()
+    eng = CNNEngine(net, method=Method.ADVANCED_SIMD_8)
+    params = eng.init(jax.random.PRNGKey(0))
+    imgs = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(1), (16, *net.input_shape), jnp.float32))
+    return net, eng, params, imgs
+
+
+def _fresh_engine(net):
+    return CNNEngine(net, method=Method.ADVANCED_SIMD_8)
+
+
+def _submit(server, imgs, rids, top_k=5):
+    for r in rids:
+        server.submit(ImageRequest(rid=r, image=imgs[r], top_k=top_k))
+
+
+# ---------------------------------------------------------------------------
+# queueing + dynamic batch formation
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_queueing_and_full_batch_flush(lenet):
+    net, eng, params, imgs = lenet
+    clock = FakeClock()
+    srv = CNNServer(eng, params, max_batch=4, max_delay_s=10.0, clock=clock)
+    _submit(srv, imgs, range(5))
+    served = srv.step()
+    # a full max_batch is waiting -> flush the 4 OLDEST, FIFO
+    assert [r.rid for r in served] == [0, 1, 2, 3]
+    assert all(r.batch_size == 4 and r.bucket == 4 for r in served)
+    assert srv.pending() == 1
+    # the straggler is under deadline: no flush yet
+    assert srv.step() == []
+    clock.t += 11.0
+    (last,) = srv.step()
+    assert last.rid == 4 and last.batch_size == 1 and last.bucket == 1
+    assert set(srv.done) == set(range(5))
+
+
+def test_deadline_flush_with_injectable_clock(lenet):
+    net, eng, params, imgs = lenet
+    clock = FakeClock()
+    srv = CNNServer(eng, params, max_batch=8, max_delay_s=1.0, clock=clock)
+    _submit(srv, imgs, range(2))
+    assert srv.step() == []          # 2 < max_batch, deadline not reached
+    clock.t = 0.5
+    assert srv.step() == []          # still under the deadline
+    clock.t = 1.01
+    served = srv.step()              # oldest aged past max_delay_s
+    assert [r.rid for r in served] == [0, 1]
+    assert served[0].batch_size == 2 and served[0].bucket == 2
+
+
+def test_run_until_drained_forces_ragged_tail(lenet):
+    net, eng, params, imgs = lenet
+    srv = CNNServer(eng, params, max_batch=4, max_delay_s=100.0,
+                    clock=FakeClock())
+    _submit(srv, imgs, range(7))
+    done = srv.run_until_drained()
+    assert set(done) == set(range(7))
+    s = srv.stats()
+    assert s["served"] == 7 and s["batches"] == 2
+    assert s["mean_batch"] == pytest.approx(3.5)
+    assert s["p50_latency_us"] >= 0 and s["p95_latency_us"] >= \
+        s["p50_latency_us"]
+
+
+# ---------------------------------------------------------------------------
+# output parity with the unbatched per-request path
+# ---------------------------------------------------------------------------
+
+
+def test_unbatched_server_matches_per_request_exactly(lenet):
+    """With max_batch=1 every request is served unbatched through the
+    same bucket-1 jit the direct path uses — results are byte-exact."""
+    net, eng, params, imgs = lenet
+    srv = CNNServer(eng, params, max_batch=1, max_delay_s=0.0)
+    _submit(srv, imgs, range(4), top_k=3)
+    srv.run_until_drained()
+    for r in range(4):
+        probs = np.asarray(eng.forward_batched(params, imgs[r:r + 1])[0])
+        top = np.argsort(-probs, kind="stable")[:3]
+        res = srv.done[r]
+        assert res.top_indices == [int(j) for j in top]
+        assert res.top_probs == [float(probs[j]) for j in top]
+
+
+def test_ragged_batches_match_per_request(lenet):
+    """Ragged dynamic batches (padded to their bucket) reproduce each
+    request's unbatched output: byte-exact within a bucket (pad rows are
+    inert batchmates), ≤1e-6 across buckets (independently compiled XLA
+    executables of the same math)."""
+    net, eng, params, imgs = lenet
+    srv = CNNServer(eng, params, max_batch=8, max_delay_s=0.0,
+                    clock=FakeClock())
+    # three ragged flushes: 3 (bucket 4), 5 (bucket 8), 1 (bucket 1)
+    for rids in (range(0, 3), range(3, 8), range(8, 9)):
+        _submit(srv, imgs, rids, top_k=4)
+        srv.step(force=True)
+    assert sorted(r.batch_size for r in srv.done.values()) == \
+        [1] + [3] * 3 + [5] * 5
+    for r in range(9):
+        probs = np.asarray(eng.forward_batched(params, imgs[r:r + 1])[0])
+        res = srv.done[r]
+        assert np.allclose(res.top_probs,
+                           np.sort(probs)[::-1][:4], atol=1e-6)
+        assert res.top_indices == [
+            int(j) for j in np.argsort(-probs, kind="stable")[:4]]
+    # in-bucket exactness: a request's row is identical whatever its
+    # batchmates — zero-pad rows included
+    a = eng.forward_batched(params, jnp.asarray(imgs[:3]))   # bucket 4
+    b = eng.forward_batched(params, jnp.asarray(imgs[:4]))   # bucket 4
+    assert jnp.array_equal(a, b[:3])
+
+
+def test_serving_compile_bound(lenet):
+    """Arbitrary ragged traffic through CNNServer compiles at most
+    log2(max_batch)+1 jitted variants (the bucket set)."""
+    net, _, params, imgs = lenet
+    eng = _fresh_engine(net)
+    srv = CNNServer(eng, params, max_batch=8, max_delay_s=0.0,
+                    clock=FakeClock())
+    rid = 0
+    for size in (1, 2, 3, 4, 5, 6, 7, 8, 3, 5, 1, 8):
+        for _ in range(size):
+            srv.submit(ImageRequest(rid=rid, image=imgs[rid % 16]))
+            rid += 1
+        srv.step(force=True)
+    stats = eng.bucket_stats()
+    assert stats["compiles"] <= 4  # log2(8)+1
+    assert srv.stats()["served"] == rid
+
+
+# ---------------------------------------------------------------------------
+# validation + top-k edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_submit_rejects_wrong_shape(lenet):
+    net, eng, params, imgs = lenet
+    srv = CNNServer(eng, params)
+    with pytest.raises(ValueError, match="shape"):
+        srv.submit(ImageRequest(rid=0, image=np.zeros((1, 28, 29))))
+    with pytest.raises(ValueError, match="max_batch"):
+        CNNServer(eng, params, max_batch=0)
+
+
+def test_top_k_clamped_and_sorted(lenet):
+    net, eng, params, imgs = lenet
+    srv = CNNServer(eng, params, max_batch=2, max_delay_s=0.0)
+    srv.submit(ImageRequest(rid=0, image=imgs[0], top_k=99))
+    srv.run_until_drained()
+    res = srv.done[0]
+    assert len(res.top_indices) == net.num_classes
+    assert res.top_probs == sorted(res.top_probs, reverse=True)
+    assert abs(sum(res.top_probs) - 1.0) < 1e-5  # softmax distribution
+
+
+def test_reset_stats_keeps_results(lenet):
+    net, eng, params, imgs = lenet
+    srv = CNNServer(eng, params, max_batch=4, max_delay_s=0.0)
+    _submit(srv, imgs, range(3))
+    srv.run_until_drained()
+    srv.reset_stats()
+    assert srv.stats()["served"] == 0 and set(srv.done) == {0, 1, 2}
+    # retrieve-and-remove keeps a long-lived server's result map bounded
+    assert srv.pop_result(1).rid == 1
+    assert srv.pop_result(1) is None and set(srv.done) == {0, 2}

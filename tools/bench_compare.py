@@ -2,7 +2,10 @@
 """Bench-trend comparison for ``BENCH_network.json`` artifacts.
 
 Diffs two network-ladder bench files (previous vs current), per network,
-per method, per variant (unfused/fused), on ``us_per_call``.  Prints a
+per method, per variant (unfused/fused), on ``us_per_call`` — plus the
+batched-serving rows (``CNNServer`` p50 latency per max_batch, flattened
+as method ``cnn_server`` / variant ``batchN``; throughput and p95 ride
+along in the json but the gate compares p50).  Prints a
 markdown trend table (CI pipes it into ``$GITHUB_STEP_SUMMARY``) and —
 with ``--fail-on-regress`` — exits non-zero when any row slows down by
 more than ``--max-regress-pct`` percent.  Rows present on only one side
@@ -51,7 +54,9 @@ def config_mismatch(prev: dict, cur: dict) -> List[str]:
 
 
 def flatten(data: dict) -> FlatBench:
-    """``BENCH_network.json`` -> {(network, method, variant): us_per_call}."""
+    """``BENCH_network.json`` -> {(network, method, variant): us_per_call}.
+    Serving rows flatten to ``(net, "cnn_server", "batchN") -> p50_us``
+    so the same trend/gate machinery covers them."""
     flat: FlatBench = {}
     for net, nd in data.get("networks", {}).items():
         for row in nd.get("rows", []):
@@ -59,7 +64,19 @@ def flatten(data: dict) -> FlatBench:
                 if variant in row:
                     flat[(net, row["method"], variant)] = (
                         row[variant]["us_per_call"])
+        for srow in nd.get("serving", []):
+            flat[(net, "cnn_server", f"batch{srow['batch']}")] = (
+                srow["p50_us"])
     return flat
+
+
+def strip_serving(data: dict) -> None:
+    """Drop the serving rows from a bench dict in place (used when the
+    two files' ``serving_config`` disagree: p50 at a different request
+    count / batch sweep is not comparable — serving rows report as
+    ``new`` while the ladder rows still gate)."""
+    for nd in data.get("networks", {}).values():
+        nd.pop("serving", None)
 
 
 def flatten_groups(data: dict) -> Dict[Tuple[str, str], List[str]]:
@@ -182,6 +199,13 @@ def main(argv=None) -> int:
                             for k in mismatch)
                 + ") — baseline reset, no comparison performed")
         prev = {}
+    elif prev.get("serving_config") != cur.get("serving_config"):
+        # serving sweep config changed: only the serving rows reset (the
+        # ladder rows still compare — their config matched above)
+        note = ("⚠️ serving config changed "
+                f"({prev.get('serving_config')} → "
+                f"{cur.get('serving_config')}) — serving baseline reset")
+        strip_serving(prev)
     rows = compare(flatten(prev), flatten(cur), args.max_regress_pct)
     print(render_markdown(rows, args.max_regress_pct, note))
     # no composition diff against a reset/absent baseline — every row

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.netdefs import LayerSpec, NetworkDef, NETWORKS
+from repro.core.plan import compile_plan, infer_param_shapes
 
 FORMAT_VERSION = 1
 
@@ -104,4 +105,22 @@ def load_model(path) -> Tuple[NetworkDef, dict, dict]:
             for l in nd["layers"]
         ),
     )
+    # the declared architecture must size the shipped tensors: a tampered
+    # layer table (wrong kernel, channel count, fc fan-in) fails HERE,
+    # not at first inference with a cryptic dot-shape error
+    for name, shp in infer_param_shapes(net).items():
+        spec = next(l for l in net.layers if l.name == name)
+        b_shape = (shp[0],) if spec.kind == "conv" else (shp[1],)
+        for key, want in ((f"{name}/w", tuple(shp)), (f"{name}/b", b_shape)):
+            meta = manifest["tensors"].get(key)
+            got = None if meta is None else tuple(meta["shape"])
+            if got != want:
+                raise ValueError(
+                    f"manifest geometry mismatch: tensor {key} must be "
+                    f"{want} for the declared architecture, manifest "
+                    f"records {got}")
+    # static plan verification: shape flow, band coverage, VMEM audit
+    # (PlanVerificationError is a ValueError — corrupt geometry fails
+    # the load exactly like a checksum or dtype mismatch)
+    compile_plan(net, verify=True)
     return net, _unflatten(flat), manifest["extra"]

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.findings import Finding
 from repro.core.methods import Method, conv2d
 from repro.core.netdefs import NetworkDef
 from repro.core.plan import (  # noqa: F401  (_pool/_lrn re-exported: the
@@ -246,6 +247,15 @@ class CNNEngine:
                 per_layer_fuse=self.per_layer_fuse,
                 use_pallas=self.use_pallas)
         return self._plans[use_fuse]
+
+    def verify(self, fuse: Optional[bool] = None) -> List[Finding]:
+        """Run the static plan verifier over this engine's compiled plan
+        and return ALL findings (``compile_plan`` already raises on
+        error-severity ones; this surfaces the warnings/infos too —
+        the knob-sweep oracle the autotuner arc builds on)."""
+        from repro.analysis.verifier import verify_plan
+
+        return verify_plan(self.plan(fuse))
 
     def forward(self, params, x, collect: Optional[dict] = None,
                 fuse: Optional[bool] = None):

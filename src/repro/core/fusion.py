@@ -347,17 +347,35 @@ def fusion_summary(plan: Iterable[PlanItem]) -> List[Tuple[str, ...]]:
     return [it.names for it in plan if isinstance(it, FusedLayerSpec)]
 
 
-def group_geometry(group: FusedLayerSpec, method: Method,
-                   in_shape: Tuple[int, int, int],
-                   oh_block: Optional[int]) -> dict:
-    """The executed geometry of one fused group: the final-row band the
-    Pallas cell resolves (``rows_per_cell`` pooled/final rows per grid
-    cell × ``n_tiles`` bands per frame) plus the group's output spatial
-    size.  Shares ``kernels.resolve_ph_block``/``resolve_chain_block``
-    with the kernels themselves, so the report IS what a Pallas run
-    would execute (the XLA analogue runs each group as one un-banded
-    pass).  ``in_shape`` is the ``(C, H, W)`` activation entering the
-    group — the plan IR carries it pre-resolved on each fused step."""
+def group_band_params(group: FusedLayerSpec, method: Method,
+                      in_shape: Tuple[int, int, int],
+                      oh_block: Optional[int]) -> dict:
+    """The FULL resolved band geometry + VMEM accounting of one fused
+    group's Pallas cell, re-derived from the same kernel resolvers the
+    dispatch path runs (``resolve_ph_block`` / ``resolve_chain_block`` /
+    ``chain_band_geometry``) — the single source the engine's geometry
+    report AND the static plan verifier read.
+
+    Keys:
+
+    * ``kind``: ``"fused"`` (single conv + pool) or ``"chain"``,
+    * ``blk`` / ``n_tiles`` / ``total``: final rows per grid cell, bands
+      per frame, and the valid final-row count they must partition,
+    * ``band`` / ``row_step`` / ``in_base``: input rows one cell stages,
+      the per-band input-row advance, and the stage-0 padded-coordinate
+      offset of band 0 (≤ 0: the kernel pre-pads ``-in_base`` extra top
+      zero rows),
+    * ``stride_eff`` / ``window_eff``: the group collapsed to ONE
+      effective conv — input rows advanced per final row, and input rows
+      one final row reads (``band == (blk-1)*stride_eff + window_eff``),
+    * ``padded_h``: the genuine zero-padded input frame height (rows at
+      or past it that a band touches are bottom overshoot — pad fetched
+      and sliced off),
+    * ``cell_bytes`` / ``floor_bytes`` / ``budget``: the modelled VMEM
+      working set of the resolved cell, of the one-final-row floor cell,
+      and the budget both are admitted against,
+    * ``out_hw``: the group's output spatial size.
+    """
     from repro.kernels.conv2d import kernels as K
     from repro.kernels.conv2d.ops import SUBLANES
 
@@ -377,17 +395,73 @@ def group_geometry(group: FusedLayerSpec, method: Method,
             ocb = oc  # basic_simd / LRN tail: full oc width
         else:
             ocb = min(_ADVANCED_OC_BLOCK[method], oc)
-        ph = (oh - pool_t[0]) // pool_t[2] + 1
+        kh, kw = cv.kernel
+        sy = cv.stride[0]
+        pkh, _, psy, _ = pool_t
+        ph = (oh - pkh) // psy + 1
         blk, n_tiles = K.resolve_ph_block(
-            ph, oh, ow, wp, cp, cv.kernel[0], cv.kernel[1], cv.stride[0],
-            ocb, pool_t, oh_block, im2col=im2col)
+            ph, oh, ow, wp, cp, kh, kw, sy, ocb, pool_t, oh_block,
+            im2col=im2col)
+        stride_eff = psy * sy          # input rows per pooled row
+        window_eff = (pkh - 1) * sy + kh
+        geo = {
+            "kind": "fused", "blk": blk, "n_tiles": n_tiles, "total": ph,
+            "band": (blk - 1) * stride_eff + window_eff,
+            "row_step": blk * stride_eff, "in_base": 0,
+            "stride_eff": stride_eff, "window_eff": window_eff,
+            "padded_h": h + 2 * cv.padding[0],
+            "cell_bytes": K.fused_cell_bytes(blk, ow, wp, cp, kh, kw, sy,
+                                             ocb, pool_t, im2col=im2col),
+            "floor_bytes": K.fused_cell_bytes(1, ow, wp, cp, kh, kw, sy,
+                                              ocb, pool_t, im2col=im2col),
+            "budget": K.VMEM_BUDGET_BYTES,
+        }
     else:
         chain, ocs = layers_as_chain(group.convs)
         blk, n_tiles = K.resolve_chain_block(h, w, cp, chain, ocs, pool_t,
                                              oh_block, im2col=im2col)
+        _, _, band, in_step, in_base = K.chain_band_geometry(blk, chain,
+                                                             pool_t)
+        hh, ww = h, w
+        for cv in group.convs:
+            hh, ww = _conv_out_hw(hh, ww, cv)
+        if pool_t is not None:
+            total = (hh - pool_t[0]) // pool_t[2] + 1
+        else:
+            total = hh
+        stride_eff = in_step // blk    # in_step is blk whole strides
+        geo = {
+            "kind": "chain", "blk": blk, "n_tiles": n_tiles, "total": total,
+            "band": band, "row_step": in_step, "in_base": in_base,
+            "stride_eff": stride_eff,
+            "window_eff": band - (blk - 1) * stride_eff,
+            "padded_h": h + 2 * chain[0][4],
+            "cell_bytes": K.chain_cell_bytes(blk, h, w, cp, chain, ocs,
+                                             pool_t, im2col=im2col),
+            "floor_bytes": K.chain_cell_bytes(1, h, w, cp, chain, ocs,
+                                              pool_t, im2col=im2col),
+            "budget": K.CHAIN_VMEM_BUDGET_BYTES,
+        }
     for cv in group.convs:
         h, w = _conv_out_hw(h, w, cv)
     if group.pool is not None:
         h, w = _pool_out_hw(h, w, group.pool)
+    geo["out_hw"] = [h, w]
+    return geo
+
+
+def group_geometry(group: FusedLayerSpec, method: Method,
+                   in_shape: Tuple[int, int, int],
+                   oh_block: Optional[int]) -> dict:
+    """The executed geometry of one fused group: the final-row band the
+    Pallas cell resolves (``rows_per_cell`` pooled/final rows per grid
+    cell × ``n_tiles`` bands per frame) plus the group's output spatial
+    size.  A compact view over ``group_band_params`` — the report IS
+    what a Pallas run would execute (the XLA analogue runs each group as
+    one un-banded pass).  ``in_shape`` is the ``(C, H, W)`` activation
+    entering the group — the plan IR carries it pre-resolved on each
+    fused step."""
+    geo = group_band_params(group, method, in_shape, oh_block)
     return {"group": group.name, "convs": len(group.convs),
-            "rows_per_cell": blk, "n_tiles": n_tiles, "out_hw": [h, w]}
+            "rows_per_cell": geo["blk"], "n_tiles": geo["n_tiles"],
+            "out_hw": geo["out_hw"]}

@@ -233,6 +233,10 @@ class ExecutionPlan:
     use_pallas: bool
     steps: Tuple[PlanStep, ...]
     items: Tuple[PlanItem, ...]
+    #: the vmem_budget override compile_plan was called with (None = the
+    #: kernel-module defaults) — recorded so the static verifier audits
+    #: the same ceiling the fusion planner admitted against
+    vmem_budget: Optional[int] = None
 
     def __iter__(self):
         return iter(self.items)
@@ -267,7 +271,8 @@ def compile_plan(net: NetworkDef, *,
                  fuse_relu: bool = True,
                  per_layer_fuse: Optional[Mapping[str, bool]] = None,
                  use_pallas: bool = False,
-                 vmem_budget: Optional[int] = None) -> ExecutionPlan:
+                 vmem_budget: Optional[int] = None,
+                 verify: bool = True) -> ExecutionPlan:
     """Lower ``net`` into an ``ExecutionPlan``.
 
     Subsumes the legacy interpreter's per-call work: runs the fusion
@@ -276,6 +281,12 @@ def compile_plan(net: NetworkDef, *,
     conv/fc/pool step (``fuse_relu``), resolves every layer's method /
     ``oh_block`` override, and propagates activation shapes so each step
     carries its input/output geometry.
+
+    ``verify=True`` (the default) runs the static plan verifier
+    (``repro.analysis.verifier.verify_plan``) over the compiled plan and
+    raises ``PlanVerificationError`` on any error-severity finding —
+    every engine construction and ``deploy.load_model`` self-checks its
+    geometry before the first batch arrives.
     """
     per_layer_methods = per_layer_methods or {}
     per_layer_oh_blocks = per_layer_oh_blocks or {}
@@ -367,5 +378,14 @@ def compile_plan(net: NetworkDef, *,
                                   spec=spec))
         else:
             raise ValueError(spec.kind)
-    return ExecutionPlan(net=net, fuse=fuse, use_pallas=use_pallas,
-                         steps=tuple(steps), items=tuple(items))
+    plan = ExecutionPlan(net=net, fuse=fuse, use_pallas=use_pallas,
+                         steps=tuple(steps), items=tuple(items),
+                         vmem_budget=vmem_budget)
+    if verify:
+        # deferred import: analysis imports this module at its top level
+        from repro.analysis.verifier import PlanVerificationError, verify_plan
+
+        errors = [f for f in verify_plan(plan) if f.severity == "error"]
+        if errors:
+            raise PlanVerificationError(errors)
+    return plan

@@ -111,29 +111,56 @@ def _band_rows(oh_block, kh, sy):
     return (oh_block - 1) * sy + kh
 
 
+def band_intervals(n_tiles, blk, total, row_step, band, base: int = 0):
+    """Per-grid-cell ``(start, rows)`` intervals of a banded kernel grid.
+
+    Returns ``(out_iv, in_iv)``: ``out_iv[t]`` is cell ``t``'s output
+    band in output-row coordinates with ``rows`` clipped to the ``total``
+    valid rows (the surplus rows of a ragged last band are sliced off by
+    the caller), and ``in_iv[t]`` the input-row band the cell stages, in
+    padded-input coordinates — ``start = base + t*row_step``; a negative
+    ``base`` means the caller pre-pads that many extra top zero rows (the
+    chain cells' intermediate vertical padding).  ONE copy of the
+    tile-planning math: ``_plan_oh_tiles`` / ``_plan_pool_tiles`` /
+    ``pool2d_nhwc`` derive their bottom-padding need from ``in_iv[-1]``,
+    and the static plan verifier (``repro.analysis.verifier``) proves
+    band coverage over the same lists the kernels execute.
+    """
+    out_iv = [(t * blk, max(0, min(blk, total - t * blk)))
+              for t in range(n_tiles)]
+    in_iv = [(base + t * row_step, band) for t in range(n_tiles)]
+    return out_iv, in_iv
+
+
+def conv_cell_bytes(ohb, ow, wp, c, kh, kw, sy, oc_block,
+                    im2col: bool = True, itemsize: int = 4) -> int:
+    """Modelled VMEM working set of ONE un-fused conv grid cell (fp32
+    staging): the halo-inclusive input row band, the patch staging (full
+    im2col matrix for the advanced kernels, one [rows, C] slice for the
+    basic kernel), one weight block, and the output accumulator.  Shared
+    by the ``auto_oh_block`` walk and the static plan verifier's budget
+    audit."""
+    patch_c = kh * kw * c if im2col else c
+    band = _band_rows(ohb, kh, sy)
+    return (band * wp * c              # input row band (incl. halo)
+            + ohb * ow * patch_c       # patch staging
+            + kh * kw * c * oc_block   # weight block
+            + ohb * ow * oc_block      # output block / accumulator
+            ) * itemsize
+
+
 def auto_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block,
                   budget: int = VMEM_BUDGET_BYTES, itemsize: int = 4,
                   im2col: bool = True) -> int:
-    """Largest output-row band whose per-cell working set fits ``budget``.
-
-    Working set (fp32 staging): the input row band, the patch staging, one
-    weight block, and the output block.  ``im2col=True`` (advanced kernel)
-    charges the full [rows, KH*KW*C] patch matrix; ``im2col=False`` (basic
-    kernel) charges only the single [rows, C] slice it holds at a time.
-    Candidates walk down from the whole frame through powers of two; the
-    floor is a single output row.
+    """Largest output-row band whose per-cell working set
+    (``conv_cell_bytes``) fits ``budget``.  Candidates walk down from the
+    whole frame through powers of two; the floor is a single output row.
     """
-    patch_c = kh * kw * c if im2col else c
     candidates = [oh] + [b for b in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1)
                          if b < oh]
     for ohb in candidates:
-        band = _band_rows(ohb, kh, sy)
-        need = (band * wp * c          # input row band (incl. halo)
-                + ohb * ow * patch_c       # patch staging
-                + kh * kw * c * oc_block   # weight block
-                + ohb * ow * oc_block      # output block / accumulator
-                ) * itemsize
-        if need <= budget:
+        if conv_cell_bytes(ohb, ow, wp, c, kh, kw, sy, oc_block,
+                           im2col=im2col, itemsize=itemsize) <= budget:
             return ohb
     return 1
 
@@ -289,6 +316,9 @@ def conv2d_basic_parallel(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
         ],
         out_specs=pl.BlockSpec((None, oc, oh, ow), lambda i: (i, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, oc, oh, ow), x.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)
+        ),
         interpret=interpret,
     )(xp, w, b)
 
@@ -311,9 +341,9 @@ def _plan_oh_tiles(xp, oh, kh, kw, sy, oh_block, ow, oc_block,
     ohb = resolve_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block, oh_block,
                            im2col=im2col)
     n_tiles = -(-oh // ohb)
-    ohp = n_tiles * ohb
     band = _band_rows(ohb, kh, sy)
-    hp_need = (ohp - 1) * sy + kh
+    _, in_iv = band_intervals(n_tiles, ohb, oh, ohb * sy, band)
+    hp_need = in_iv[-1][0] + band
     if hp_need > hp:
         xp = jnp.pad(xp, ((0, 0), (0, hp_need - hp), (0, 0), (0, 0)))
     return xp, ohb, n_tiles, band
@@ -358,7 +388,8 @@ def _plan_pool_tiles(xp, oh, ow, kh, kw, sy, oh_block, oc_block, pool,
     cband = (phb - 1) * psy + pkh           # conv rows per cell
     band = (cband - 1) * sy + kh            # input rows per cell (halo incl.)
     row_step = phb * psy * sy
-    hp_need = (n_tiles - 1) * row_step + band
+    _, in_iv = band_intervals(n_tiles, phb, ph, row_step, band)
+    hp_need = in_iv[-1][0] + band
     if hp_need > hp:
         xp = jnp.pad(xp, ((0, 0), (0, hp_need - hp), (0, 0), (0, 0)))
     return xp, phb, n_tiles, band, cband, ph, pw, row_step
@@ -645,6 +676,18 @@ def chain_band_geometry(blk, chain, pool):
     band = (m[0] - 1) * sy0 + kh0
     a0, b0 = offs[0]
     return m, offs, band, a0 * sy0, b0 * sy0
+
+
+def chain_tile_intervals(blk, n_tiles, target, chain, pool):
+    """Per-grid-cell ``(start, rows)`` intervals of a chain dispatch —
+    final-stage output bands (clipped to the ``target`` valid rows) and
+    the composed halo-inclusive input bands in stage-0 *pre-padded*
+    coordinates (a negative start means the kernel pre-pads that many
+    extra genuine-zero top rows).  Shares ``chain_band_geometry`` with
+    the kernel and ``band_intervals`` with the single-conv planners, so
+    the verifier proves coverage over exactly what the cell executes."""
+    _, _, band, in_step, in_base = chain_band_geometry(blk, chain, pool)
+    return band_intervals(n_tiles, blk, target, in_step, band, base=in_base)
 
 
 def chain_cell_bytes(blk, h, w, c, chain, ocs, pool,

@@ -26,6 +26,7 @@ from repro.kernels.conv2d.kernels import (
     VMEM_BUDGET_BYTES,
     _band_rows,
     auto_oh_block,
+    band_intervals,
 )
 
 
@@ -103,12 +104,13 @@ def pool2d_nhwc(x_nhwc, kernel=(2, 2), stride=(2, 2), kind: str = "max",
         ohb = max(1, min(oh_block, oh))
     n_tiles = -(-oh // ohb)
     band = _band_rows(ohb, kh, sy)
+    row_step = ohb * sy
     # pad the bottom so the last (possibly ragged) band stays in bounds;
     # the surplus pooled rows only read pad and are sliced off below
-    hp_need = (n_tiles * ohb - 1) * sy + kh
+    _, in_iv = band_intervals(n_tiles, ohb, oh, row_step, band)
+    hp_need = in_iv[-1][0] + band
     if hp_need > h:
         x_nhwc = jnp.pad(x_nhwc, ((0, 0), (0, hp_need - h), (0, 0), (0, 0)))
-    row_step = ohb * sy
     kern = functools.partial(_pool2d_kernel, kh=kh, kw=kw, sy=sy, sx=sx,
                              kind=kind, relu=relu)
     out = pl.pallas_call(

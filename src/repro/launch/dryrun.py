@@ -39,6 +39,10 @@ import time
 import traceback
 from pathlib import Path
 
+#: per-device bf16 KV-cache footprint above which decode shapes switch to
+#: int8 KV quantization (documented beyond-paper serving optimization)
+KV_QUANT_THRESHOLD_BYTES = 8 * 2**30
+
 
 def _build_step(cfg, shape, mesh_cfg, rules, mb_override=None):
     """Returns (fn, arg_specs) ready for jit(fn).lower(*arg_specs)."""
@@ -166,7 +170,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
                   else cfg.num_layers // cfg.shared_attn_every)
         cache_bytes = (2 * n_attn * shape.global_batch * s_eff
                        * cfg.num_kv_heads * cfg.head_dim * 2)
-        if cache_bytes / mesh_cfg.num_devices > 8 * 2**30:
+        if cache_bytes / mesh_cfg.num_devices > KV_QUANT_THRESHOLD_BYTES:
             cfg = dataclasses.replace(cfg, kv_quant=True)
     mb_override = None
     vnotes = []
@@ -280,11 +284,12 @@ def main() -> None:
         path = out_dir / f"{arch}__{shape}__{mesh_tag}{vtag}.json"
         if args.skip_existing and path.exists():
             try:
-                if json.loads(path.read_text()).get("status") == "ok":
-                    print(f"[skip] {arch} {shape} {mesh_tag}")
-                    continue
-            except Exception:
-                pass
+                status = json.loads(path.read_text()).get("status")
+            except (OSError, json.JSONDecodeError):
+                status = None  # unreadable/corrupt record: re-run it
+            if status == "ok":
+                print(f"[skip] {arch} {shape} {mesh_tag}")
+                continue
         print(f"[run ] {arch} {shape} {mesh_tag}", flush=True)
         rec = run_one(arch, shape, args.multi_pod, out_dir,
                       save_hlo=args.save_hlo, variants=variants)

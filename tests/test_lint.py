@@ -1,0 +1,189 @@
+"""Repo lint: baseline cleanliness + seeded-snippet detection per rule."""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import lint_source, lint_tree
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def test_repo_baseline_is_clean():
+    """src/repro must lint clean — the CI gate enforces this forever."""
+    assert lint_tree(REPO / "src" / "repro") == []
+
+
+# -- R001: pallas_call kwargs ----------------------------------------------
+
+def test_r001_missing_kwargs():
+    src = """
+out = pl.pallas_call(kern, grid=(n,), out_shape=shape)(x)
+"""
+    findings = lint_source(src)
+    assert rules_of(findings) == {"R001"}
+    assert "interpret" in findings[0].detail
+
+
+def test_r001_threaded_kwargs_clean():
+    src = """
+out = pl.pallas_call(
+    kern, grid=(n,), out_shape=shape,
+    compiler_params=pltpu.TPUCompilerParams(
+        dimension_semantics=("parallel",)),
+    interpret=interpret,
+)(x)
+"""
+    assert lint_source(src) == []
+
+
+# -- R002: knob invalidation ------------------------------------------------
+
+def test_r002_mutator_without_on_change():
+    src = """
+class _KnobDict(dict):
+    def __setitem__(self, k, v):
+        super().__setitem__(k, v)   # stale-plan bug: no invalidation
+"""
+    findings = lint_source(src)
+    assert rules_of(findings) == {"R002"}
+    assert "__setitem__" in findings[0].detail
+
+
+def test_r002_mutator_delegation_clean():
+    src = """
+class _KnobDict(dict):
+    def __setitem__(self, k, v):
+        super().__setitem__(k, v)
+        self._on_change()
+
+    def __ior__(self, other):
+        self.update(other)   # delegation to a checked mutator is fine
+        return self
+"""
+    assert lint_source(src) == []
+
+
+def test_r002_knob_name_mismatch():
+    src = """
+class Engine:
+    method = _knob("oh_block")   # wraps the WRONG attribute
+"""
+    findings = lint_source(src)
+    assert rules_of(findings) == {"R002"}
+
+
+def test_r002_clear_caches_missing_cache():
+    src = """
+class Engine:
+    def __init__(self):
+        self._plans = {}
+        self._jit_cache = {}
+
+    def clear_caches(self):
+        self._plans.clear()   # forgets _jit_cache
+"""
+    findings = lint_source(src)
+    assert rules_of(findings) == {"R002"}
+    assert "_jit_cache" in findings[0].detail
+
+
+def test_r002_clear_caches_complete_clean():
+    src = """
+class Engine:
+    def __init__(self):
+        self._plans = {}
+        self._jit_cache = {}
+
+    def clear_caches(self):
+        self._plans.clear()
+        self._jit_cache.clear()
+"""
+    assert lint_source(src) == []
+
+
+# -- R003: Unblocked index maps --------------------------------------------
+
+def test_r003_inline_arithmetic():
+    src = """
+spec = pl.BlockSpec((1, band, wp, c),
+                    lambda i, t: (i, t * 8, 0, 0),
+                    indexing_mode=pl.Unblocked())
+"""
+    findings = lint_source(src)
+    assert rules_of(findings) == {"R003"}
+
+
+def test_r003_resolver_named_offset_clean():
+    src = """
+spec = pl.BlockSpec((1, band, wp, c),
+                    lambda i, t: (i, t * row_step, 0, 0),
+                    indexing_mode=pl.Unblocked())
+"""
+    assert lint_source(src) == []
+
+
+def test_r003_blocked_spec_literals_allowed():
+    # block-index (non-Unblocked) specs index in block units; literals fine
+    src = """
+spec = pl.BlockSpec((None, 4, oh, ow), lambda i, t: (i, t * 2, 0, 0))
+"""
+    assert lint_source(src) == []
+
+
+# -- R004: silent excepts ---------------------------------------------------
+
+def test_r004_silent_broad_except():
+    src = """
+try:
+    risky()
+except Exception:
+    pass
+"""
+    findings = lint_source(src)
+    assert rules_of(findings) == {"R004"}
+
+
+def test_r004_bare_except_pass():
+    src = """
+try:
+    risky()
+except:
+    pass
+"""
+    assert rules_of(lint_source(src)) == {"R004"}
+
+
+def test_r004_narrow_or_handled_clean():
+    src = """
+try:
+    risky()
+except OSError:
+    pass
+
+try:
+    risky()
+except Exception:
+    log.warning("risky failed")
+"""
+    assert lint_source(src) == []
+
+
+# -- R005: magic byte budgets ----------------------------------------------
+
+@pytest.mark.parametrize("expr", ["8388608", "8 * 1024 * 1024", "14 << 20"])
+def test_r005_magic_budget_comparison(expr):
+    findings = lint_source(f"ok = cell_bytes <= {expr}\n")
+    assert rules_of(findings) == {"R005"}
+
+
+def test_r005_named_budget_clean():
+    src = """
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024   # definitions are fine
+ok = cell_bytes <= VMEM_BUDGET_BYTES
+small = n <= 128
+"""
+    assert lint_source(src) == []

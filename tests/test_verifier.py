@@ -1,0 +1,298 @@
+"""Static plan verifier: clean sweep + mutation detection.
+
+The mutation tests seed each known-bad-geometry class the verifier
+exists to catch — off-by-one halo, gapped/overlapping output bands, a
+budget-busting chain the planner wrongly admitted, an un-equalized
+ragged band (the PR 3 over-fetch regression) — and assert the RIGHT
+rule ID fires.  Geometry defects are injected by monkeypatching the
+kernel geometry helpers the resolvers run through, so the whole
+re-derivation path (fusion.group_band_params → kernels.band_intervals)
+is exercised, not just the pure checker.
+"""
+import dataclasses
+
+import pytest
+
+from repro.analysis.findings import Finding, PlanVerificationError, RULES
+from repro.analysis.verifier import check_band_coverage, verify_plan
+from repro.core.methods import Method
+from repro.core.netdefs import LayerSpec, NetworkDef, NETWORKS
+from repro.core.plan import compile_plan
+import repro.core.fusion as fusion_mod
+import repro.kernels.conv2d.kernels as K
+
+METHODS = (Method.BASIC_SIMD, Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8)
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# -- clean sweep ------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(NETWORKS))
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("fuse", [False, True])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_bundled_nets_verify_clean(name, method, fuse, use_pallas):
+    net = NETWORKS[name]()
+    plan = compile_plan(net, method=method, fuse=fuse,
+                        use_pallas=use_pallas, verify=False)
+    assert verify_plan(plan) == []
+
+
+def test_compile_plan_verifies_by_default(monkeypatch):
+    """compile_plan(verify=True) is the default and raises on errors."""
+    calls = []
+    import repro.analysis.verifier as verifier_mod
+
+    real = verifier_mod.verify_plan
+    monkeypatch.setattr(verifier_mod, "verify_plan",
+                        lambda p: calls.append(1) or real(p))
+    compile_plan(NETWORKS["lenet5"]())
+    assert calls  # the verifier ran without being asked for
+
+
+# -- pure coverage checker (hand-built geometries) --------------------------
+
+def _geo(**over):
+    """A consistent fused-style geometry: blk=4 pooled rows × 3 bands over
+    total=12, effective stride 2 / window 3."""
+    base = dict(kind="fused", blk=4, n_tiles=3, total=12, band=9,
+                row_step=8, in_base=0, stride_eff=2, window_eff=3,
+                padded_h=26, cell_bytes=0, floor_bytes=0, budget=1,
+                out_hw=[12, 12])
+    base.update(over)
+    return base
+
+
+def test_checker_accepts_consistent_geometry():
+    assert check_band_coverage(_geo(), "t") == []
+
+
+def test_checker_flags_gapped_bands():
+    # one band too few: rows [8, 12) are never produced
+    findings = check_band_coverage(_geo(n_tiles=2), "t", equalized=False)
+    assert rules_of(findings) == {"V201"}
+
+
+def test_checker_flags_surplus_bands_as_unequalized():
+    # one band too many: partition still closes (empty last band) but the
+    # fair-share invariant is broken — the over-fetch detector fires
+    findings = check_band_coverage(_geo(n_tiles=4), "t")
+    assert "V204" in rules_of(findings)
+
+
+def test_checker_flags_shrunk_halo():
+    # band one row short of (blk-1)*stride + window: scalar inconsistency
+    # AND the per-band window containment both fire
+    findings = check_band_coverage(_geo(band=8), "t")
+    assert {"V203", "V205"} <= rules_of(findings)
+
+
+def test_checker_flags_drifting_row_step():
+    # row_step != blk*stride: later bands start short of what their
+    # output rows read
+    findings = check_band_coverage(_geo(row_step=7), "t")
+    assert {"V203", "V205"} <= rules_of(findings)
+
+
+def test_checker_flags_band_above_frame(monkeypatch):
+    # an input interval starting above the pre-padded origin
+    real = K.band_intervals
+
+    def shifted(n_tiles, blk, total, row_step, band, base=0):
+        out_iv, in_iv = real(n_tiles, blk, total, row_step, band, base=base)
+        in_iv = [(s - 1, r) for s, r in in_iv]
+        return out_iv, in_iv
+
+    monkeypatch.setattr(K, "band_intervals", shifted)
+    findings = check_band_coverage(_geo(), "t")
+    assert "V202" in rules_of(findings)
+
+
+def test_checker_flags_overlapping_bands(monkeypatch):
+    real = K.band_intervals
+
+    def overlapping(n_tiles, blk, total, row_step, band, base=0):
+        out_iv, in_iv = real(n_tiles, blk, total, row_step, band, base=base)
+        out_iv = [(max(0, s - 1), r) for s, r in out_iv]  # bands collide
+        return out_iv, in_iv
+
+    monkeypatch.setattr(K, "band_intervals", overlapping)
+    findings = check_band_coverage(_geo(), "t")
+    assert "V201" in rules_of(findings)
+
+
+# -- end-to-end mutations through compiled plans ----------------------------
+
+def _pool_net(h=56):
+    """conv(SAME, k5) → oh 56 → pool 3/2 → ph 27: the PR 3 regression
+    vector (27 does not divide evenly into 23-row-derived bands)."""
+    return NetworkDef("t", (3, h, h), 4, (
+        LayerSpec("conv", "c1", out_channels=16, kernel=(5, 5),
+                  padding=(2, 2), relu=True),
+        LayerSpec("pool", "p1", kernel=(3, 3), stride=(2, 2)),
+    ))
+
+
+def test_pr3_ragged_band_overfetch_regression(monkeypatch):
+    """Un-equalized ragged pooled bands (the PR 3 _plan_pool_tiles bug):
+    with band equalization knocked out, an explicit oh_block=23 over
+    ph=27 resolves to 11-row bands whose last band is mostly pad —
+    V204 must catch it statically."""
+    def unequalized(blk, target):
+        blk = max(1, min(blk, target))
+        return blk, -(-target // blk)   # no fair-share re-snap
+
+    monkeypatch.setattr(K, "_equalize_bands", unequalized)
+    plan = compile_plan(_pool_net(), method=Method.ADVANCED_SIMD_8,
+                        fuse=True, use_pallas=True, oh_block=23,
+                        verify=False)
+    assert [s.kind for s in plan.steps] == ["fused"]
+    findings = verify_plan(plan)
+    assert rules_of(findings) == {"V204"}
+    # and the default compile path refuses the plan outright
+    with pytest.raises(PlanVerificationError) as exc:
+        compile_plan(_pool_net(), method=Method.ADVANCED_SIMD_8,
+                     fuse=True, use_pallas=True, oh_block=23)
+    assert "V204" in str(exc.value)
+
+
+def test_unsnapped_pool_band_detected(monkeypatch):
+    """A pool band resolver that ignores the pool-stride snap entirely
+    (hands back the raw conv oh_block) breaks the fair-share invariant."""
+    def unsnapped(ph, oh, ow, wp, c, kh, kw, sy, ocb, pool, oh_block,
+                  im2col=True):
+        ohb = max(1, min(oh_block, ph))
+        return ohb, -(-ph // ohb)
+
+    monkeypatch.setattr(K, "resolve_ph_block", unsnapped)
+    plan = compile_plan(_pool_net(), method=Method.ADVANCED_SIMD_8,
+                        fuse=True, use_pallas=True, oh_block=23,
+                        verify=False)
+    findings = verify_plan(plan)
+    assert "V204" in rules_of(findings)
+
+
+def test_off_by_one_halo_detected(monkeypatch):
+    """Every halo band staged one input row short — the classic
+    under-fetch that only corrupts the last output row of each band."""
+    real = K.band_intervals
+
+    def short_halo(n_tiles, blk, total, row_step, band, base=0):
+        out_iv, in_iv = real(n_tiles, blk, total, row_step, band, base=base)
+        return out_iv, [(s, r - 1) for s, r in in_iv]
+
+    monkeypatch.setattr(K, "band_intervals", short_halo)
+    plan = compile_plan(_pool_net(), method=Method.ADVANCED_SIMD_8,
+                        fuse=True, use_pallas=True, verify=False)
+    findings = verify_plan(plan)
+    assert rules_of(findings) == {"V203"}
+
+
+def _chain_net():
+    """Two wide back-to-back convs whose chain cell cannot fit VMEM even
+    at the one-row floor (resident weights alone ≈ 19 MB > 14 MB)."""
+    return NetworkDef("t", (512, 16, 16), 4, (
+        LayerSpec("conv", "c1", out_channels=512, kernel=(3, 3),
+                  padding=(1, 1), relu=True),
+        LayerSpec("conv", "c2", out_channels=512, kernel=(3, 3),
+                  padding=(1, 1), relu=True),
+    ))
+
+
+def test_budget_busting_chain_detected(monkeypatch):
+    """A fusion planner that stops checking VMEM admits a chain whose
+    floor cell busts the budget — the verifier audits it back out."""
+    monkeypatch.setattr(fusion_mod, "_fits_vmem",
+                        lambda *a, **k: True)
+    plan = compile_plan(_chain_net(), method=Method.ADVANCED_SIMD_8,
+                        fuse=True, use_pallas=True, verify=False)
+    assert [s.kind for s in plan.steps] == ["chain"]
+    findings = verify_plan(plan)
+    assert {"V302", "V303"} <= rules_of(findings)
+    assert all(f.severity == "error" for f in findings)
+    with pytest.raises(PlanVerificationError):
+        compile_plan(_chain_net(), method=Method.ADVANCED_SIMD_8,
+                     fuse=True, use_pallas=True)
+
+
+def test_budget_findings_downgrade_off_pallas(monkeypatch):
+    """The same busted chain on the XLA path is advisory only: there is
+    no VMEM ceiling to violate, so compile does NOT raise."""
+    monkeypatch.setattr(fusion_mod, "_fits_vmem",
+                        lambda *a, **k: True)
+    plan = compile_plan(_chain_net(), method=Method.ADVANCED_SIMD_8,
+                        fuse=True, use_pallas=False)  # verify=True: no raise
+    findings = verify_plan(plan)
+    assert {"V302", "V303"} <= rules_of(findings)
+    assert all(f.severity == "info" for f in findings)
+
+
+def test_shape_corruption_detected():
+    """A step whose recorded shapes disagree with the layer math: V101 on
+    the corrupt step, V102 where the chain breaks downstream."""
+    plan = compile_plan(_pool_net(), method=Method.SEQ_REF, fuse=False,
+                        verify=False)
+    step0 = plan.steps[0]
+    bad = dataclasses.replace(step0, out_shape=(step0.out_shape[0],
+                                                step0.out_shape[1] + 1,
+                                                step0.out_shape[2]))
+    plan = dataclasses.replace(plan, steps=(bad,) + plan.steps[1:])
+    findings = verify_plan(plan)
+    assert {"V101", "V102"} <= rules_of(findings)
+
+
+def test_param_shape_mismatch_detected():
+    """Verifying a plan against an independently-trusted NetworkDef with
+    different channel counts: the parameter-geometry cross-check fires."""
+    plan = compile_plan(_pool_net(), method=Method.SEQ_REF, fuse=False,
+                        verify=False)
+    other = NetworkDef("t", (3, 56, 56), 4, (
+        LayerSpec("conv", "c1", out_channels=32, kernel=(5, 5),
+                  padding=(2, 2), relu=True),
+        LayerSpec("pool", "p1", kernel=(3, 3), stride=(2, 2)),
+    ))
+    findings = verify_plan(plan, net=other)
+    assert "V103" in rules_of(findings)
+
+
+def test_findings_are_structured():
+    f = Finding("error", "step0:c1", "V201", "gap")
+    assert f.rule in RULES and "V201" in str(f)
+    with pytest.raises(ValueError):
+        Finding("fatal", "s", "V201", "bad severity")
+    with pytest.raises(ValueError):
+        Finding("error", "s", "V999", "unknown rule")
+
+
+def test_engine_verify_convenience():
+    from repro.core.engine import CNNEngine
+
+    eng = CNNEngine(NETWORKS["lenet5"](), method=Method.ADVANCED_SIMD_4)
+    assert eng.verify() == []
+
+
+def test_deploy_detects_manifest_geometry_tamper(tmp_path):
+    """A manifest whose layer table was edited (conv kernel 5→3) no
+    longer sizes the shipped tensors — load must fail, not run."""
+    import json
+
+    import jax
+
+    from repro.core.deploy import load_model, save_model
+    from repro.core.engine import CNNEngine
+
+    net = NETWORKS["lenet5"]()
+    eng = CNNEngine(net, method=Method.SEQ_REF)
+    params = eng.init(jax.random.PRNGKey(0))
+    save_model(tmp_path / "m", net, params)
+    load_model(tmp_path / "m")  # intact artifact loads
+    manifest = json.loads((tmp_path / "m" / "manifest.json").read_text())
+    conv = next(l for l in manifest["network"]["layers"]
+                if l["kind"] == "conv")
+    conv["kernel"] = [3, 3]
+    (tmp_path / "m" / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="geometry"):
+        load_model(tmp_path / "m")

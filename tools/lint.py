@@ -1,0 +1,53 @@
+#!/usr/bin/env python
+"""Run the repo lint pass (R-rules) — CI gate and local pre-commit check.
+
+    PYTHONPATH=src python tools/lint.py [--json | --md] \
+        [--fail-on-findings] [paths ...]
+
+Defaults to linting ``src/repro``.  ``--fail-on-findings`` exits 1 when
+anything at all is reported (CI uses it; locally the table alone is
+often what you want).  Rule taxonomy: ``src/repro/analysis/README.md``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.findings import findings_json, findings_markdown
+from repro.analysis.lint import lint_file, lint_tree
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to lint (default src/repro)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON")
+    ap.add_argument("--md", action="store_true",
+                    help="emit findings as a markdown table")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 1 if any finding is reported")
+    args = ap.parse_args(argv)
+
+    findings = []
+    for p in (args.paths or ["src/repro"]):
+        path = Path(p)
+        if path.is_dir():
+            findings += lint_tree(path)
+        else:
+            findings += lint_file(path)
+
+    if args.json:
+        print(findings_json(findings))
+    elif args.md:
+        print(findings_markdown(findings, title="Repo lint"), end="")
+    else:
+        for f in findings:
+            print(f)
+        print(f"{len(findings)} finding(s)")
+    return 1 if (args.fail_on_findings and findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

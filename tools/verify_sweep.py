@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Static-verify every bundled netdef across the knob grid — CI gate.
+
+    PYTHONPATH=src python tools/verify_sweep.py [--json | --md]
+
+Compiles each network in ``core.netdefs.NETWORKS`` under every SIMD
+method × fuse setting × backend (XLA / Pallas) — plans only, nothing
+executes — and runs ``repro.analysis.verifier.verify_plan`` over each.
+Exits 1 on ANY finding (any severity): the bundled networks are the
+repo's reference configurations and must verify spotless.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.findings import (
+    Finding,
+    findings_json,
+    findings_markdown,
+)
+from repro.analysis.verifier import verify_plan
+from repro.core.methods import Method
+from repro.core.netdefs import NETWORKS
+from repro.core.plan import compile_plan
+
+METHODS = (Method.BASIC_SIMD, Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8)
+
+
+def sweep():
+    findings, combos = [], 0
+    for name in sorted(NETWORKS):
+        net = NETWORKS[name]()
+        for method in METHODS:
+            for fuse in (False, True):
+                for use_pallas in (False, True):
+                    combos += 1
+                    plan = compile_plan(net, method=method, fuse=fuse,
+                                        use_pallas=use_pallas, verify=False)
+                    tag = (f"{name}/{method.value}/fuse={fuse}/"
+                           f"pallas={use_pallas}")
+                    for f in verify_plan(plan):
+                        findings.append(Finding(
+                            f.severity, f"{tag}::{f.step}", f.rule,
+                            f.detail))
+    return findings, combos
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+
+    findings, combos = sweep()
+    title = (f"Plan verifier sweep — {combos} configurations, "
+             f"{len(findings)} finding(s)")
+    if args.json:
+        print(findings_json(findings))
+    elif args.md:
+        print(findings_markdown(findings, title=title), end="")
+    else:
+        for f in findings:
+            print(f)
+        print(title)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

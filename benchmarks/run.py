@@ -89,10 +89,16 @@ def _run_json(nets, out_path: str, batch: int, iters: int,
                      f" fused_vs_unfused={ratio:.2f}x" if ratio else ""),
                   flush=True)
         for srow in nd.get("serving", []):
-            print(f"  {name}/cnn_server/batch{srow['batch']}: "
-                  f"rps={srow['throughput_rps']:.1f} "
-                  f"p50={srow['p50_us']:.0f}us p95={srow['p95_us']:.0f}us",
-                  flush=True)
+            mode = srow.get("mode", "normal")
+            tag = f"batch{srow['batch']}" + (
+                "" if mode == "normal" else f"-{mode}")
+            line = (f"  {name}/cnn_server/{tag}: "
+                    f"rps={srow['throughput_rps']:.1f} "
+                    f"p50={srow['p50_us']:.0f}us p95={srow['p95_us']:.0f}us")
+            if mode != "normal":
+                line += (f" shed={srow['shed']} degraded={srow['degraded']}"
+                         f" final={srow['final_method']}")
+            print(line, flush=True)
 
 
 def main(argv=None) -> None:

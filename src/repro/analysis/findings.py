@@ -68,6 +68,10 @@ RULES = {
     "R005": ("lint",
              "magic-number byte budget in a comparison — use the named "
              "kernel budget constants"),
+    "R006": ("lint",
+             "serving/ except handler swallows a supervisor error: it "
+             "must re-raise, reference its bound exception, or record a "
+             "typed failure result (FailedResult/ShedResult/...)"),
 }
 
 

@@ -21,6 +21,12 @@ Rules (see ``findings.RULES`` / ``analysis/README.md``):
   only ``pass``/``...`` swallows planner and IO failures.
 * **R005** — byte budgets appear in comparisons only through the named
   kernel constants, never as magic numbers (≥ 1 MiB literals).
+* **R006** — serving-path supervision cannot swallow errors: every
+  ``except`` handler in a ``serving/`` module must re-raise, reference
+  its bound exception (``except X as e`` + use of ``e`` — recording the
+  failure), or name a typed failure result (``FailedResult`` /
+  ``ShedResult`` / the engine-fault types).  A handler that does none
+  of these turns a supervisor error into a silent drop.
 
 All rules are file-local AST walks — no imports of the linted modules,
 so the linter runs on any tree (including deliberately-broken test
@@ -274,7 +280,44 @@ def _r005(tree: ast.AST, path: str) -> List[Finding]:
     return out
 
 
-_RULES = (_r001, _r002, _r003, _r004, _r005)
+# -- R006 -------------------------------------------------------------------
+
+#: typed failure results / fault types whose mention in a handler counts
+#: as recording the error (the serving failure taxonomy)
+R006_TYPED_NAMES = frozenset({
+    "FailedResult", "ShedResult", "EngineFault", "TransientEngineFault",
+    "PersistentEngineFault", "ServerWedgedError", "NonFiniteInputError",
+})
+
+
+def _r006(tree: ast.AST, path: str) -> List[Finding]:
+    """serving/ except handlers must re-raise or record a typed failure
+    (no swallowed supervisor errors).  File-scoped: the rule only binds
+    on modules under a ``serving/`` directory."""
+    if "serving/" not in path.replace("\\", "/"):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        body_nodes = [n for stmt in node.body for n in ast.walk(stmt)]
+        if any(isinstance(n, ast.Raise) for n in body_nodes):
+            continue
+        names = {n.id for n in body_nodes if isinstance(n, ast.Name)}
+        names |= {n.attr for n in body_nodes if isinstance(n, ast.Attribute)}
+        if node.name and node.name in names:
+            continue  # the bound exception is used: the error is recorded
+        if names & R006_TYPED_NAMES:
+            continue  # a typed failure result is produced
+        out.append(Finding(
+            "error", _loc(path, node), "R006",
+            "serving/ except handler neither re-raises, uses its bound "
+            "exception, nor records a typed failure result — the "
+            "supervisor error is swallowed"))
+    return out
+
+
+_RULES = (_r001, _r002, _r003, _r004, _r005, _r006)
 
 
 def lint_source(src: str, path: str = "<string>",

@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis.findings import Finding
+from repro.analysis.findings import Finding, PlanVerificationError
 from repro.core.methods import Method, conv2d
 from repro.core.netdefs import NetworkDef
 from repro.core.plan import (  # noqa: F401  (_pool/_lrn re-exported: the
@@ -256,6 +256,39 @@ class CNNEngine:
         from repro.analysis.verifier import verify_plan
 
         return verify_plan(self.plan(fuse))
+
+    #: knob names switch_verified accepts — exactly the cache-invalidating
+    #: configuration surface (the _knob/_dict_knob descriptors above)
+    KNOBS = ("method", "use_pallas", "fuse_relu", "fuse_pool", "oh_block",
+             "per_layer_methods", "per_layer_oh_blocks", "per_layer_fuse")
+
+    def switch_verified(self, **knobs) -> Tuple[bool, List[Finding]]:
+        """Atomically apply a candidate knob configuration, but only if
+        its compiled plan passes static verification with no
+        error-severity findings — otherwise roll every knob back and
+        report why.  This is the degradation ladder's gate: a rung is
+        never served until ``CNNEngine.verify()`` has blessed it.
+
+        Returns ``(switched, findings)``: ``findings`` is the full list
+        (warnings/infos included on success, the error findings on
+        rollback).  Unknown knob names raise — a typo must not silently
+        verify the unchanged configuration."""
+        unknown = set(knobs) - set(self.KNOBS)
+        if unknown:
+            raise ValueError(f"unknown knob(s): {sorted(unknown)}")
+        snapshot = {k: (dict(getattr(self, k)) if k.startswith("per_layer")
+                        else getattr(self, k)) for k in knobs}
+        for k, v in knobs.items():
+            setattr(self, k, v)
+        try:
+            findings = self.verify()
+        except PlanVerificationError as e:
+            findings = e.findings
+        if any(f.severity == "error" for f in findings):
+            for k, v in snapshot.items():
+                setattr(self, k, v)
+            return False, findings
+        return True, findings
 
     def forward(self, params, x, collect: Optional[dict] = None,
                 fuse: Optional[bool] = None):

@@ -1,5 +1,15 @@
-from repro.serving.cnn import CNNServer, ImageRequest, ImageResult
+from repro.serving.cnn import (CNNServer, FailedResult, ImageRequest,
+                               ImageResult, NonFiniteInputError,
+                               ServerWedgedError, ShedResult,
+                               SupervisorConfig)
+from repro.serving.degrade import DegradeController, Rung, default_ladder
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import (EngineFault, FaultInjector, FaultScript,
+                                  PersistentEngineFault,
+                                  TransientEngineFault)
 
-__all__ = ["CNNServer", "ImageRequest", "ImageResult", "Request",
-           "ServingEngine"]
+__all__ = ["CNNServer", "DegradeController", "EngineFault", "FailedResult",
+           "FaultInjector", "FaultScript", "ImageRequest", "ImageResult",
+           "NonFiniteInputError", "PersistentEngineFault", "Request",
+           "Rung", "ServerWedgedError", "ServingEngine", "ShedResult",
+           "SupervisorConfig", "TransientEngineFault", "default_ladder"]

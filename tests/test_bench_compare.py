@@ -194,3 +194,48 @@ def test_config_change_resets_baseline(tmp_path, capsys):
     out = capsys.readouterr().out
     assert "bench config changed" in out and "batch: 8 → 16" in out
     assert "regressed" not in out and "🆕 new" in out
+
+
+def test_zero_or_absent_p50_serving_rows_are_skipped():
+    """Shed-everything overload rows (or fake-clock runs) carry p50 0.0
+    or no p50 at all — flatten must skip them, and a zero baseline must
+    never be divided by."""
+    cur = json.loads(json.dumps(PREV))
+    cur["networks"]["lenet5"]["serving"] = [
+        {"batch": 8, "throughput_rps": 50.0, "p50_us": 4000.0,
+         "p95_us": 5000.0, "mean_batch": 8.0},
+        {"batch": 8, "mode": "degraded", "throughput_rps": 0.0,
+         "p50_us": 0.0, "p95_us": 0.0, "mean_batch": 0.0},   # all shed
+        {"batch": 16, "throughput_rps": 10.0},               # no p50 key
+    ]
+    flat = bench_compare.flatten(cur)
+    assert ("lenet5", "cnn_server", "batch8") in flat
+    assert ("lenet5", "cnn_server", "batch8-degraded") not in flat
+    assert ("lenet5", "cnn_server", "batch16") not in flat
+    # a zero prev value reaching compare() reports "new", never divides
+    rows = bench_compare.compare(
+        {("lenet5", "cnn_server", "batch8"): 0.0},
+        {("lenet5", "cnn_server", "batch8"): 4000.0}, 25.0)
+    assert rows[0]["status"] == "new" and rows[0]["delta_pct"] is None
+
+
+def test_degraded_mode_serving_rows_get_own_variant():
+    """Overload rows flatten as 'batchN-degraded' — trended separately
+    from the normal-mode row at the same max_batch."""
+    def mk(normal_p50, degraded_p50):
+        b = json.loads(json.dumps(PREV))
+        b["networks"]["lenet5"]["serving"] = [
+            {"batch": 8, "p50_us": normal_p50, "throughput_rps": 100.0},
+            {"batch": 8, "mode": "degraded", "p50_us": degraded_p50,
+             "throughput_rps": 20.0, "shed": 48, "degraded": 1},
+        ]
+        b["serving_config"] = {"batches": [8], "requests": 16,
+                               "overload": {"batch": 8, "requests": 64}}
+        return b
+
+    prev, cur = mk(4000.0, 8000.0), mk(4000.0, 12000.0)
+    by = _by_key(bench_compare.compare(bench_compare.flatten(prev),
+                                       bench_compare.flatten(cur), 25.0))
+    assert by[("lenet5", "cnn_server", "batch8")]["status"] == "ok"
+    assert by[("lenet5", "cnn_server", "batch8-degraded")]["status"] == \
+        "regressed"

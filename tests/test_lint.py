@@ -187,3 +187,60 @@ ok = cell_bytes <= VMEM_BUDGET_BYTES
 small = n <= 128
 """
     assert lint_source(src) == []
+
+
+# -- R006: serving/ supervisor error handling ------------------------------
+
+SERVING_PATH = "src/repro/serving/x.py"
+
+
+def test_r006_swallowed_serving_except():
+    src = """
+try:
+    run_batch()
+except Exception:
+    count += 1
+"""
+    assert rules_of(lint_source(src, path=SERVING_PATH)) == {"R006"}
+
+
+def test_r006_only_fires_under_serving():
+    src = """
+try:
+    run_batch()
+except Exception:
+    count += 1
+"""
+    # outside serving/ the broad-except rule (R004) may speak, R006 not
+    assert "R006" not in rules_of(lint_source(src, path="src/repro/core/x.py"))
+
+
+def test_r006_reraise_clean():
+    src = """
+try:
+    run_batch()
+except Exception:
+    raise
+"""
+    assert lint_source(src, path=SERVING_PATH) == []
+
+
+def test_r006_bound_exception_referenced_clean():
+    src = """
+try:
+    run_batch()
+except TransientEngineFault as e:
+    last_err = e
+"""
+    assert lint_source(src, path=SERVING_PATH) == []
+
+
+def test_r006_typed_failure_result_clean():
+    src = """
+try:
+    run_batch()
+except Exception:
+    out.append(FailedResult(rid=rid, error="engine_fault", detail="boom",
+                            latency_s=0.0, batch_size=1, bucket=1))
+"""
+    assert lint_source(src, path=SERVING_PATH) == []

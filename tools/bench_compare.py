@@ -65,8 +65,16 @@ def flatten(data: dict) -> FlatBench:
                     flat[(net, row["method"], variant)] = (
                         row[variant]["us_per_call"])
         for srow in nd.get("serving", []):
-            flat[(net, "cnn_server", f"batch{srow['batch']}")] = (
-                srow["p50_us"])
+            # absent/zero p50 (e.g. a shed-everything overload row, or a
+            # fake-clock run) carries nothing comparable: skip the row
+            # rather than divide by it
+            p50 = srow.get("p50_us")
+            if not p50:
+                continue
+            mode = srow.get("mode", "normal")
+            variant = (f"batch{srow['batch']}" if mode == "normal"
+                       else f"batch{srow['batch']}-{mode}")
+            flat[(net, "cnn_server", variant)] = p50
     return flat
 
 
@@ -140,7 +148,10 @@ def compare(prev: FlatBench, cur: FlatBench,
         row = {"network": net, "method": method, "variant": variant,
                "prev_us": prev.get(key), "cur_us": cur.get(key),
                "delta_pct": None}
-        if key not in prev:
+        if key not in prev or not prev[key]:
+            # a zero previous value (defensive: flatten already drops
+            # them) is not a comparable baseline — report "new", never
+            # divide by it
             row["status"] = "new"
         elif key not in cur:
             row["status"] = "removed"

@@ -1,0 +1,189 @@
+"""Fit the analytic cost model's coefficients against BENCH history.
+
+Every ``BENCH_network.json`` ladder row (network × method × fused/
+unfused) becomes one calibration point: its plan is recompiled exactly
+as the bench ran it, ``repro.core.cost`` extracts the aggregate features
+(per-bucket GFLOPs, HBM GB streamed, dispatch count), and the measured
+``us_per_call`` is the target.  A deterministic fit/holdout split
+(points sorted by id, every ``--holdout-every``-th held out) keeps the
+reported rank correlation honest: ``spearman_holdout`` is computed on
+points the solver never saw.  Serving rows (``cnn_server``) are queue
+latencies, not per-call kernel time — they are not calibration points.
+
+The fitted coefficients land in ``COST_MODEL.json`` under their backend
+key (other backends' entries are preserved on re-fit), which
+``tools/autotune.py`` and ``tools/cost_validate.py`` consume:
+
+    PYTHONPATH=src python -m benchmarks.cost_fit BENCH_network.json \
+        --out COST_MODEL.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Mapping, Tuple
+
+from repro.core.cost import (CostModel, fit_coefficients, fused_flop_key,
+                             plan_cost, spearman)
+from repro.core.methods import Method
+from repro.core.netdefs import NETWORKS
+from repro.core.plan import compile_plan
+
+COST_MODEL_FORMAT_VERSION = 1
+
+
+def bench_backend(bench: Mapping) -> Tuple[str, bool]:
+    """The bench's backend name and whether its plans ran Pallas."""
+    backend = bench.get("backend", "cpu")
+    return backend, backend not in ("cpu",)
+
+
+def ladder_points(bench: Mapping) -> List[Dict]:
+    """One calibration point per measured ladder row-variant, features
+    extracted from the SAME plan configuration the bench executed."""
+    batch = int(bench["batch"])
+    _, use_pallas = bench_backend(bench)
+    pts: List[Dict] = []
+    for net_name in sorted(bench["networks"]):
+        net = NETWORKS[net_name]()
+        for row in bench["networks"][net_name]["rows"]:
+            method = Method(row["method"])
+            for variant, fuse in (("unfused", False), ("fused", True)):
+                r = row.get(variant)
+                if not r:
+                    continue
+                plan = compile_plan(net, method=method, fuse=fuse,
+                                    use_pallas=use_pallas, verify=False)
+                pc = plan_cost(plan, batch=batch)
+                pts.append({
+                    "id": f"{net_name}/{method.value}/{variant}",
+                    # the per-step buckets plan_cost prices (what the
+                    # validator and the committed-model rho see)
+                    "flops_by_key": pc.flops_by_key,
+                    # the solver's view: the row's TOTAL flops under the
+                    # row's method(:fused) bucket.  A whole-ladder row
+                    # ran every layer under one method; giving fc its
+                    # own column makes it collinear with the method
+                    # columns and the solver prunes it into nonsense —
+                    # collapsing is the attribution that actually ranks
+                    # (the fc coefficient is pinned post-fit instead)
+                    "fit_flops_by_key": {
+                        fused_flop_key(method) if fuse else method.value:
+                        pc.flops},
+                    "hbm_bytes": pc.hbm_bytes,
+                    "dispatches": pc.dispatches,
+                    "us": float(r["us_per_call"]),
+                })
+    return pts
+
+
+def split_points(pts: List[Dict],
+                 holdout_every: int = 3) -> Tuple[List[Dict], List[Dict]]:
+    """Deterministic fit/holdout split: sorted by id, every
+    ``holdout_every``-th point held out (0 disables the holdout)."""
+    pts = sorted(pts, key=lambda p: p["id"])
+    if holdout_every <= 0:
+        return pts, []
+    fit, hold = [], []
+    for i, p in enumerate(pts):
+        (hold if i % holdout_every == holdout_every - 1 else fit).append(p)
+    return fit, hold
+
+
+def _rho(model: CostModel, pts: List[Dict]) -> float:
+    pred = [model.predict(p["flops_by_key"], p["hbm_bytes"],
+                          p["dispatches"]) for p in pts]
+    return spearman(pred, [p["us"] for p in pts])
+
+
+def fit_model(bench: Mapping, holdout_every: int = 3) -> Tuple[CostModel,
+                                                               Dict]:
+    """Fit on the split's fit points; validate rank fidelity on the fit
+    set, the holdout set, and all points.  Returns the model plus the
+    validation record that ships inside COST_MODEL.json."""
+    backend, _ = bench_backend(bench)
+    pts = ladder_points(bench)
+    fit_pts, hold_pts = split_points(pts, holdout_every)
+    model = fit_coefficients(
+        [{**p, "flops_by_key": p["fit_flops_by_key"]} for p in fit_pts],
+        backend=backend)
+    # pin the buckets the collapsed fit cannot see: fc is the same
+    # fused-matmul staging as the advanced path (price it there), and
+    # the pool/lrn/softmax tail rides with it — both are small slices
+    # of any row, but the max-fitted fallback would let them dominate
+    coeffs = dict(model.us_per_gflop)
+    coeffs["fc"] = coeffs["other"] = coeffs[Method.ADVANCED_SIMD_8.value]
+    model = CostModel(backend=model.backend, us_per_gflop=coeffs,
+                      us_per_gb=model.us_per_gb,
+                      dispatch_us=model.dispatch_us)
+    validation = {
+        "points": len(pts),
+        "fit_points": len(fit_pts),
+        "holdout_points": len(hold_pts),
+        "holdout_every": holdout_every,
+        "spearman_fit": round(_rho(model, fit_pts), 4),
+        "spearman_holdout": (round(_rho(model, hold_pts), 4)
+                             if len(hold_pts) >= 2 else None),
+        "spearman_all": round(_rho(model, pts), 4),
+    }
+    return model, validation
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", nargs="?", default="BENCH_network.json",
+                    help="measured BENCH_network.json to calibrate against")
+    ap.add_argument("--out", default="COST_MODEL.json",
+                    help="cost-model file to write (existing entries for "
+                         "OTHER backends are preserved)")
+    ap.add_argument("--holdout-every", type=int, default=3,
+                    help="hold out every N-th point for validation "
+                         "(0 = fit on everything)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.bench) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot read bench file {args.bench}: {e}",
+              file=sys.stderr)
+        return 2
+
+    model, validation = fit_model(bench, args.holdout_every)
+    entry = model.to_dict()
+    entry["fitted_from"] = {
+        "bench": args.bench,
+        "nets": sorted(bench["networks"]),
+        "batch": bench.get("batch"),
+        "iters": bench.get("iters"),
+    }
+    entry["validation"] = validation
+
+    out_path = Path(args.out)
+    data = {"format_version": COST_MODEL_FORMAT_VERSION, "backends": {}}
+    if out_path.exists():
+        try:
+            data = json.loads(out_path.read_text())
+        except json.JSONDecodeError:
+            print(f"warning: overwriting unreadable {args.out}",
+                  file=sys.stderr)
+            data = {"format_version": COST_MODEL_FORMAT_VERSION,
+                    "backends": {}}
+    data.setdefault("backends", {})[model.backend] = entry
+    out_path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+
+    print(f"fitted backend={model.backend} from {validation['fit_points']} "
+          f"points (holdout {validation['holdout_points']})")
+    print(f"  spearman fit={validation['spearman_fit']} "
+          f"holdout={validation['spearman_holdout']} "
+          f"all={validation['spearman_all']}")
+    print(f"  us_per_gflop={ {k: round(v, 1) for k, v in model.us_per_gflop.items()} }")
+    print(f"  us_per_gb={model.us_per_gb:.2f} dispatch_us={model.dispatch_us:.2f}")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

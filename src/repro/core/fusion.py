@@ -180,12 +180,21 @@ def chain_working_set(convs, pool, method: Optional[Method],
                               im2col=im2col)
 
 
+#: a fusion cost gate: ``gate(candidate_group, method, in_shape) -> bool``
+#: — True admits the group, False sends the planner down the same
+#: shorter-chain fallback ladder the VMEM check uses.  Built by
+#: ``repro.core.cost.fusion_cost_gate``.
+CostGate = Callable[["FusedLayerSpec", Optional[Method],
+                     Tuple[int, int, int]], bool]
+
+
 def plan_fusion(net: NetworkDef, *,
                 method_for: Optional[Callable[[str], Method]] = None,
                 no_fuse: Iterable[str] = (),
                 fuse_relu: bool = True,
                 vmem_budget: Optional[int] = None,
-                vmem_check: bool = True) -> List[PlanItem]:
+                vmem_check: bool = True,
+                cost_gate: Optional[CostGate] = None) -> List[PlanItem]:
     """Greedy left-to-right grouping of conv-chain[+relu][+pool][+lrn]
     runs.
 
@@ -198,6 +207,14 @@ def plan_fusion(net: NetworkDef, *,
     resident weights are not double-buffered); ``vmem_check=False`` skips
     the check entirely — the engine passes its ``use_pallas`` here, since
     the one-NHWC-pass XLA analogue has no VMEM ceiling to respect.
+
+    ``cost_gate`` (the cost-model flag) REPLACES the raw budget check:
+    each candidate group is admitted by the gate instead of by
+    ``_fits_vmem``, so a group can be declined for being modelled SLOWER
+    than its per-layer ladder even though it fits VMEM (and the gate is
+    consulted on the XLA path too, where there is no VMEM ceiling).  A
+    declined candidate walks the same fallback ladder: drop the LRN
+    tail, then trailing convs, then decline outright.
     Returns the layer sequence with each fused run replaced by one
     ``FusedLayerSpec``; ungrouped layers pass through unchanged.
     """
@@ -210,7 +227,7 @@ def plan_fusion(net: NetworkDef, *,
         spec = layers[i]
         if spec.kind == "conv":
             group = _try_group(layers, i, method_for, no_fuse, fuse_relu,
-                               c, h, w, vmem_budget, vmem_check)
+                               c, h, w, vmem_budget, vmem_check, cost_gate)
             if group is not None:
                 plan.append(group)
                 for cv in group.convs:
@@ -230,7 +247,9 @@ def plan_fusion(net: NetworkDef, *,
 
 
 def _try_group(layers, i, method_for, no_fuse, fuse_relu, cin, h_in, w_in,
-               vmem_budget, vmem_check=True) -> Optional[FusedLayerSpec]:
+               vmem_budget, vmem_check=True,
+               cost_gate: Optional[CostGate] = None,
+               ) -> Optional[FusedLayerSpec]:
     """A FusedLayerSpec for the run starting at conv ``layers[i]``, or
     None when any eligibility check fails (the per-layer fallback)."""
     first = layers[i]
@@ -290,18 +309,33 @@ def _try_group(layers, i, method_for, no_fuse, fuse_relu, cin, h_in, w_in,
             if (k < len(layers) and layers[k].kind == "lrn"
                     and layers[k].name not in no_fuse):
                 lrn = layers[k]
-    # -- VMEM working-set check with shorter-chain fallback ----------------
-    # (Pallas path only): the fused kernel shrinks its final-row band to
-    # fit, but never below one final row — when even that floor cell
-    # busts the budget, first drop the LRN tail, then trailing convs
-    # (the detached pool/convs re-enter the greedy scan), and only
-    # decline outright at a single conv+pool that still cannot fit.
-    if vmem_check:
+    # -- admission check with shorter-chain fallback -----------------------
+    # Raw VMEM working-set check (Pallas path only): the fused kernel
+    # shrinks its final-row band to fit, but never below one final row —
+    # when even that floor cell busts the budget, first drop the LRN
+    # tail, then trailing convs (the detached pool/convs re-enter the
+    # greedy scan), and only decline outright at a single conv+pool that
+    # still cannot fit.  A ``cost_gate`` REPLACES the raw check (and
+    # binds on the XLA path too): the same fallback ladder, but a group
+    # is declined when the cost model scores it slower than its
+    # per-layer ladder, not only when it busts VMEM.
+    if vmem_check or cost_gate is not None:
         while True:
             if len(convs) == 1 and pool is None:
                 return None
-            if _fits_vmem(convs, pool, method, cin, h_in, w_in,
-                          lrn is not None, vmem_budget):
+            if cost_gate is not None:
+                cand = FusedLayerSpec(
+                    convs=tuple(convs), relus=tuple(relus), pool=pool,
+                    pool_relu=pool_relu,
+                    names=(tuple(n for stage in conv_names for n in stage)
+                           + tuple(pool_names)
+                           + ((lrn.name,) if lrn is not None else ())),
+                    lrn=lrn)
+                admitted = cost_gate(cand, method, (cin, h_in, w_in))
+            else:
+                admitted = _fits_vmem(convs, pool, method, cin, h_in, w_in,
+                                      lrn is not None, vmem_budget)
+            if admitted:
                 break
             if lrn is not None:
                 lrn = None
@@ -340,6 +374,19 @@ def _fits_vmem(convs, pool, method, cin, h_in, w_in, with_lrn,
                else (Method.BASIC_SIMD, Method.ADVANCED_SIMD_8))
     return max(fused_working_set(convs[0], pool, m, cin, w_in, lrn=with_lrn)
                for m in methods) <= budget
+
+
+def group_fits_vmem(group: FusedLayerSpec, method: Optional[Method],
+                    in_shape: Tuple[int, int, int],
+                    vmem_budget: Optional[int] = None) -> bool:
+    """The planner's working-set admission check, for an already-formed
+    group: True when the group's one-final-row floor cell fits the
+    (chain or fused) VMEM budget.  This is the budget leg a cost-model
+    gate (``repro.core.cost.fusion_cost_gate``) runs before comparing
+    modelled latencies — same accounting, public entry point."""
+    c, h, w = in_shape
+    return _fits_vmem(list(group.convs), group.pool, method, c, h, w,
+                      group.lrn is not None, vmem_budget)
 
 
 def fusion_summary(plan: Iterable[PlanItem]) -> List[Tuple[str, ...]]:

@@ -37,6 +37,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.fusion import (
+    FUSABLE_METHODS,
+    CostGate,
     FusedLayerSpec,
     PlanItem,
     _conv_out_hw,
@@ -80,6 +82,50 @@ def infer_param_shapes(net: NetworkDef) -> Dict[str, Tuple]:
             shapes[spec.name] = (d_in, spec.out_channels)
             flat = spec.out_channels
     return shapes
+
+
+#: the conv methods worth sweeping per layer: the three fusable SIMD
+#: rungs (seq_ref / basic_parallel are reference semantics, never faster)
+SIMD_METHODS: Tuple[Method, ...] = tuple(
+    m for m in Method if m in FUSABLE_METHODS)
+
+#: default per-layer band-override candidates the autotuner tries on top
+#: of the resolver's auto sizing (clipped per layer to its output height)
+OH_BLOCK_CANDIDATES: Tuple[int, ...] = (4, 8, 16, 32, 64)
+
+
+def knob_space(net: NetworkDef, *,
+               methods: Tuple[Method, ...] = SIMD_METHODS,
+               oh_blocks: Tuple[int, ...] = OH_BLOCK_CANDIDATES,
+               ) -> Dict[str, Dict[str, list]]:
+    """The per-layer candidate knob grid an offline autotuner sweeps:
+    ``{layer_name: {"methods": [...], "oh_blocks": [None, ...],
+    "fuse": [True, False]}}``.
+
+    Shapes are propagated through the net so each conv's ``oh_blocks``
+    list is clipped to bands strictly smaller than its output height
+    (``None`` — the resolver's VMEM-model auto sizing — always leads).
+    Pool and LRN layers expose only the ``fuse`` axis (their method/band
+    geometry is owned by the group they fuse into); fc and the other
+    pointwise tail layers expose no tunable axis today.
+    """
+    space: Dict[str, Dict[str, list]] = {}
+    c, h, w = net.input_shape
+    for spec in net.layers:
+        if spec.kind == "conv":
+            oh, ow = _conv_out_hw(h, w, spec)
+            space[spec.name] = {
+                "methods": list(methods),
+                "oh_blocks": [None] + [b for b in oh_blocks if b < oh],
+                "fuse": [True, False],
+            }
+            c, h, w = spec.out_channels, oh, ow
+        elif spec.kind == "pool":
+            space[spec.name] = {"fuse": [True, False]}
+            h, w = _pool_out_hw(h, w, spec)
+        elif spec.kind == "lrn":
+            space[spec.name] = {"fuse": [True, False]}
+    return space
 
 
 @dataclass(frozen=True)
@@ -261,6 +307,16 @@ class ExecutionPlan:
         return [group_geometry(s.group, s.method, s.in_shape, s.oh_block)
                 for s in self.steps if s.kind in ("fused", "chain")]
 
+    def cost(self, model=None, batch: int = 1):
+        """Modelled cost of this plan: a ``repro.core.cost.PlanCost``
+        with per-step FLOPs / HBM bytes / VMEM working set and, under
+        ``model`` (a fitted ``CostModel``; None = unit coefficients),
+        predicted microseconds.  Deferred import — the cost model sits
+        above the plan IR, not under it."""
+        from repro.core.cost import plan_cost
+
+        return plan_cost(self, model=model, batch=batch)
+
 
 def compile_plan(net: NetworkDef, *,
                  method: Method = Method.ADVANCED_SIMD_8,
@@ -272,6 +328,7 @@ def compile_plan(net: NetworkDef, *,
                  per_layer_fuse: Optional[Mapping[str, bool]] = None,
                  use_pallas: bool = False,
                  vmem_budget: Optional[int] = None,
+                 cost_gate: Optional[CostGate] = None,
                  verify: bool = True) -> ExecutionPlan:
     """Lower ``net`` into an ``ExecutionPlan``.
 
@@ -281,6 +338,11 @@ def compile_plan(net: NetworkDef, *,
     conv/fc/pool step (``fuse_relu``), resolves every layer's method /
     ``oh_block`` override, and propagates activation shapes so each step
     carries its input/output geometry.
+
+    ``cost_gate`` (see ``fusion.plan_fusion``) swaps the fusion
+    planner's raw VMEM budget check for a cost-model admission decision
+    (``repro.core.cost.fusion_cost_gate``) — a group fuses only when the
+    model scores the single dispatch faster than its per-layer ladder.
 
     ``verify=True`` (the default) runs the static plan verifier
     (``repro.analysis.verifier.verify_plan``) over the compiled plan and
@@ -301,7 +363,8 @@ def compile_plan(net: NetworkDef, *,
         no = frozenset(n for n, v in (per_layer_fuse or {}).items() if not v)
         items: List[PlanItem] = plan_fusion(
             net, method_for=method_for, no_fuse=no, fuse_relu=fuse_relu,
-            vmem_budget=vmem_budget, vmem_check=use_pallas)
+            vmem_budget=vmem_budget, vmem_check=use_pallas,
+            cost_gate=cost_gate)
     else:
         items = list(net.layers)
 

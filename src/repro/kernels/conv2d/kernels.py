@@ -149,6 +149,26 @@ def conv_cell_bytes(ohb, ow, wp, c, kh, kw, sy, oc_block,
             ) * itemsize
 
 
+def conv_macs(oh, ow, cin, kh, kw, oc) -> int:
+    """Multiply-accumulates of ONE conv frame (``oh×ow×oc`` outputs, each
+    reducing over ``cin×kh×kw``).  The arithmetic half of the analytic
+    cost model (``repro.core.cost``) — every ladder method computes
+    exactly these MACs; they differ only in achieved throughput."""
+    return oh * ow * oc * cin * kh * kw
+
+
+def band_overfetch_factor(n_tiles, band, padded_h) -> float:
+    """HBM input-traffic multiplier of a banded dispatch: neighbouring
+    bands re-fetch their halo rows, so one frame streams ``n_tiles *
+    band`` input rows instead of the ``padded_h`` it holds.  ≥ 1.0 by
+    construction (a single whole-frame band streams each row once).  The
+    memory half of the analytic cost model — shrinking ``oh_block`` buys
+    VMEM at the price of this factor."""
+    if padded_h <= 0:
+        return 1.0
+    return max(1.0, (n_tiles * band) / padded_h)
+
+
 def auto_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block,
                   budget: int = VMEM_BUDGET_BYTES, itemsize: int = 4,
                   im2col: bool = True) -> int:

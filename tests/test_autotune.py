@@ -1,0 +1,136 @@
+"""Tests for the offline autotuner (``tools/autotune.py``).
+
+The acceptance triple the ISSUE gates on — for the tuned plan of at
+least alexnet: (a) zero error findings from the static verifier, (b) a
+byte-exact knob round-trip through the deploy manifest, (c) modelled
+cost no worse than the default heuristic plan's — plus the search
+invariants (monotone improvement, verified candidates only) and the CLI
+exit codes CI relies on.
+"""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+from repro.analysis.verifier import verify_plan
+from repro.core import deploy
+from repro.core.cost import CostModel, plan_cost
+from repro.core.netdefs import NETWORKS
+from repro.core.plan import compile_plan
+
+_TOOL = pathlib.Path(__file__).resolve().parent.parent / "tools" / \
+    "autotune.py"
+_spec = importlib.util.spec_from_file_location("autotune", _TOOL)
+autotune = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(autotune)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return CostModel.load()  # the committed repo-root COST_MODEL.json
+
+
+@pytest.fixture(scope="module")
+def lenet_result(model):
+    return autotune.tune(NETWORKS["lenet5"](), model, batch=8, passes=1)
+
+
+@pytest.fixture(scope="module")
+def alexnet_result(model):
+    return autotune.tune(NETWORKS["alexnet"](), model, batch=8, passes=1)
+
+
+# ------------------------------------------------------ search invariants
+
+def test_tuned_cost_never_exceeds_default(lenet_result, alexnet_result):
+    for r in (lenet_result, alexnet_result):
+        assert r["cost"].us <= r["default_cost"].us
+
+
+def test_decisions_are_monotone_improvements(alexnet_result):
+    for mv in alexnet_result["decisions"]:
+        assert mv["us_after"] < mv["us_before"]
+
+
+def test_default_knobs_compile_to_default_cost(model):
+    """The search baseline IS the heuristic plan — knob identity, not
+    just cost equality."""
+    net = NETWORKS["lenet5"]()
+    knobs = autotune.default_knobs()
+    plan = compile_plan(net, verify=True, **knobs)
+    ref = compile_plan(net)
+    assert [s.kind for s in plan.steps] == [s.kind for s in ref.steps]
+
+
+# --------------------------------------------- acceptance triple (alexnet)
+
+def test_alexnet_tuned_plan_verifies_clean(alexnet_result):
+    errors = [f for f in verify_plan(alexnet_result["plan"])
+              if f.severity == "error"]
+    assert errors == []
+
+
+def test_alexnet_knobs_roundtrip_byte_exact(alexnet_result):
+    knobs = alexnet_result["knobs"]
+    d = deploy.knobs_to_manifest(knobs)
+    assert (json.dumps(d, sort_keys=True)
+            == json.dumps(deploy.knobs_to_manifest(
+                deploy.knobs_from_manifest(d)), sort_keys=True))
+
+
+def test_alexnet_reconstructed_cost_not_worse(alexnet_result, model):
+    """Recompile from the serialized knobs alone — the reconstructed
+    plan must price at (not above) the searched plan's cost."""
+    knobs = deploy.knobs_from_manifest(
+        deploy.knobs_to_manifest(alexnet_result["knobs"]))
+    plan = compile_plan(NETWORKS["alexnet"](), verify=True, **knobs)
+    us = plan_cost(plan, model, batch=8).us
+    assert us <= alexnet_result["default_cost"].us * (1 + 1e-6)
+    assert us == pytest.approx(alexnet_result["cost"].us)
+
+
+def test_write_and_check_full_artifact_gate(lenet_result, model, tmp_path):
+    """The tool's own self-check (save → reload → verify → re-price)
+    must pass end to end on a real artifact."""
+    out = tmp_path / "tuned-lenet5"
+    assert autotune.write_and_check(lenet_result, model, str(out)) == 0
+    assert deploy.load_tuned_knobs(out) == lenet_result["knobs"]
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["extra"]["autotune"]["modelled_us"] == \
+        round(lenet_result["cost"].us, 1)
+
+
+# -------------------------------------------------------------- rendering
+
+def test_decision_table_renders(lenet_result, model):
+    table = autotune.decision_table(lenet_result, model)
+    assert table.startswith("### Autotune — lenet5")
+    assert "| step | kind | method | oh_block | fused into | pred us |" \
+        in table
+    assert "default heuristic plan" in table
+    assert "tuned plan" in table
+
+
+# ------------------------------------------------------------- CLI gates
+
+def test_main_unknown_net_exits_two(capsys):
+    assert autotune.main(["--net", "resnet152"]) == 2
+    assert "unknown network" in capsys.readouterr().err
+
+
+def test_main_unloadable_model_exits_two(tmp_path, capsys):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{")
+    assert autotune.main(["--net", "lenet5", "--model", str(bad)]) == 2
+    assert "cannot load cost model" in capsys.readouterr().err
+
+
+def test_main_smoke_writes_json_record(tmp_path):
+    rec_path = tmp_path / "tune.json"
+    assert autotune.main(["--net", "lenet5", "--smoke",
+                          "--json", str(rec_path)]) == 0
+    rec = json.loads(rec_path.read_text())
+    assert rec["net"] == "lenet5"
+    assert rec["modelled_us"] <= rec["default_modelled_us"]
+    assert "tuned_plan" in rec

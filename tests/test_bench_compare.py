@@ -239,3 +239,52 @@ def test_degraded_mode_serving_rows_get_own_variant():
     assert by[("lenet5", "cnn_server", "batch8")]["status"] == "ok"
     assert by[("lenet5", "cnn_server", "batch8-degraded")]["status"] == \
         "regressed"
+
+
+def test_malformed_baseline_fails_gate_mode(tmp_path, capsys):
+    """--fail-on-regress against an unreadable baseline must exit
+    non-zero with a ::error:: verdict — a gate that cannot read its
+    baseline has not passed."""
+    prev_p, cur_p = tmp_path / "prev.json", tmp_path / "cur.json"
+    prev_p.write_text("{not json")
+    cur_p.write_text(json.dumps(PREV))
+    assert bench_compare.main([str(prev_p), str(cur_p),
+                               "--fail-on-regress"]) == 2
+    err = capsys.readouterr().err
+    assert "::error::" in err and "baseline" in err
+
+
+def test_malformed_baseline_resets_in_pr_mode(tmp_path, capsys):
+    """Without the gate flag a bad baseline warns, resets, and every
+    current row reports 'new' — the PR job stays green."""
+    prev_p, cur_p = tmp_path / "prev.json", tmp_path / "cur.json"
+    prev_p.write_text("{not json")
+    cur_p.write_text(json.dumps(PREV))
+    assert bench_compare.main([str(prev_p), str(cur_p)]) == 0
+    captured = capsys.readouterr()
+    assert "::warning::" in captured.err
+    assert "baseline reset" in captured.err
+    rows = [line for line in captured.out.splitlines()
+            if line.startswith("| lenet5") or line.startswith("| cifar10")]
+    assert rows and all("new" in r for r in rows)
+
+
+def test_missing_baseline_same_as_malformed(tmp_path):
+    cur_p = tmp_path / "cur.json"
+    cur_p.write_text(json.dumps(PREV))
+    missing = tmp_path / "nope.json"
+    assert bench_compare.main([str(missing), str(cur_p),
+                               "--fail-on-regress"]) == 2
+    assert bench_compare.main([str(missing), str(cur_p)]) == 0
+
+
+def test_malformed_current_always_fails(tmp_path, capsys):
+    """An unreadable CURRENT artifact is an error in any mode — the run
+    under test produced no readable bench."""
+    prev_p, cur_p = tmp_path / "prev.json", tmp_path / "cur.json"
+    prev_p.write_text(json.dumps(PREV))
+    cur_p.write_text("[")
+    assert bench_compare.main([str(prev_p), str(cur_p)]) == 2
+    assert "::error::" in capsys.readouterr().err
+    assert bench_compare.main([str(prev_p), str(cur_p),
+                               "--fail-on-regress"]) == 2

@@ -1,0 +1,353 @@
+"""Tests for the analytic cost model (``repro.core.cost``).
+
+Pin the contracts the autotuner and the CI accuracy gate stand on:
+per-step resource accounting (FLOPs, HBM bytes, VMEM working set),
+fusion's byte savings being visible to the model, VMEM agreeing with the
+verifier's resolved geometry, exact coefficient recovery on synthetic
+data, the rank-correlation metric, the cost-model fusion gate wired
+through ``compile_plan``, and the tuned-knobs deploy round-trip.
+"""
+import json
+
+import pytest
+
+from repro.analysis.verifier import step_band_params, verify_plan
+from repro.core import deploy
+from repro.core.cost import (
+    FLOP_KEYS,
+    CostModel,
+    StepCost,
+    fit_coefficients,
+    fused_flop_key,
+    fusion_cost_gate,
+    plan_cost,
+    spearman,
+)
+from repro.core.methods import Method
+from repro.core.netdefs import NETWORKS
+from repro.core.plan import (
+    OH_BLOCK_CANDIDATES,
+    compile_plan,
+    knob_space,
+)
+
+SIMD = Method.ADVANCED_SIMD_8
+
+
+# ------------------------------------------------- per-step accounting
+
+def test_plan_cost_totals_are_step_sums():
+    plan = compile_plan(NETWORKS["lenet5"](), method=SIMD, fuse=True)
+    pc = plan_cost(plan, batch=4)
+    assert len(pc.steps) == len(plan.steps)
+    assert pc.flops == sum(s.flops for s in pc.steps) > 0
+    assert pc.hbm_bytes == sum(s.hbm_bytes for s in pc.steps) > 0
+    assert pc.dispatches == sum(s.dispatches for s in pc.steps)
+
+
+def test_flops_scale_linearly_with_batch():
+    plan = compile_plan(NETWORKS["cifar10"](), method=SIMD, fuse=True)
+    one, eight = plan_cost(plan, batch=1), plan_cost(plan, batch=8)
+    assert eight.flops == pytest.approx(8 * one.flops)
+    # weights stream once per dispatch regardless of batch, so bytes
+    # grow sub-linearly
+    assert one.hbm_bytes < eight.hbm_bytes < 8 * one.hbm_bytes
+
+
+def test_fc_step_flops_are_two_matmul():
+    plan = compile_plan(NETWORKS["lenet5"](), method=SIMD, fuse=True)
+    fc = next(s for st, s in zip(plan.steps, plan_cost(plan).steps)
+              if st.kind == "fc")
+    # lenet5 fc1: 50*4*4 -> 500
+    assert fc.key == "fc"
+    assert fc.flops == 2.0 * 800 * 500
+
+
+def test_flatten_is_free():
+    plan = compile_plan(NETWORKS["lenet5"](), method=SIMD, fuse=False)
+    flat = next(s for st, s in zip(plan.steps, plan_cost(plan).steps)
+                if st.kind == "flatten")
+    assert flat.flops == 0 and flat.hbm_bytes == 0 and flat.dispatches == 0
+
+
+def test_fused_streams_fewer_bytes_and_dispatches_than_unfused():
+    """The fusion win the model must see: no intermediate activations,
+    one dispatch for the whole group."""
+    net = NETWORKS["lenet5"]()
+    fused = plan_cost(compile_plan(net, method=SIMD, fuse=True), batch=8)
+    unfused = plan_cost(compile_plan(net, method=SIMD, fuse=False), batch=8)
+    assert fused.hbm_bytes < unfused.hbm_bytes
+    assert fused.dispatches < unfused.dispatches
+    # arithmetic is conserved — fusion moves bytes, not FLOPs
+    assert fused.flops == pytest.approx(unfused.flops)
+
+
+def test_fused_steps_use_fused_coefficient_bucket():
+    plan = compile_plan(NETWORKS["lenet5"](), method=SIMD, fuse=True)
+    for st, sc in zip(plan.steps, plan_cost(plan).steps):
+        if st.kind in ("fused", "chain"):
+            assert sc.key == fused_flop_key(SIMD)
+            assert sc.key in FLOP_KEYS
+        elif st.kind == "conv":
+            assert sc.key == SIMD.value
+
+
+def test_vmem_matches_verifier_resolved_geometry():
+    """The model's feasibility resource must be the SAME cell bytes the
+    static verifier audits — one geometry, two consumers."""
+    plan = compile_plan(NETWORKS["alexnet"](), method=SIMD, fuse=True,
+                        use_pallas=True)
+    banded = 0
+    for st, sc in zip(plan.steps, plan_cost(plan).steps):
+        geo, _ = step_band_params(plan, st)
+        if geo is not None and st.kind in ("conv", "fused", "chain"):
+            banded += 1
+            assert sc.vmem_bytes == int(geo["cell_bytes"]) > 0
+    assert banded > 0
+
+
+def test_xla_path_charges_no_overfetch_and_no_vmem():
+    plan = compile_plan(NETWORKS["alexnet"](), method=SIMD, fuse=True,
+                        use_pallas=False)
+    for sc in plan_cost(plan).steps:
+        assert sc.vmem_bytes == 0
+
+
+# ------------------------------------------------------------ CostModel
+
+def test_unit_model_prices_all_buckets():
+    m = CostModel.unit()
+    assert set(m.us_per_gflop) == set(FLOP_KEYS)
+    # 1 GFLOP + 1 GB + 1 dispatch = 3 us under unit coefficients
+    assert m.predict({"fc": 1e9}, 1e9, 1) == pytest.approx(3.0)
+
+
+def test_unknown_bucket_falls_back_to_other():
+    m = CostModel(backend="t", us_per_gflop={"other": 7.0},
+                  us_per_gb=0.0, dispatch_us=0.0)
+    assert m.predict({"mystery": 1e9}, 0.0, 0) == pytest.approx(7.0)
+
+
+def test_model_load_roundtrip_and_backend_fallback(tmp_path):
+    m = CostModel(backend="cpu",
+                  us_per_gflop={k: 2.0 for k in FLOP_KEYS},
+                  us_per_gb=3.0, dispatch_us=4.0)
+    p = tmp_path / "COST_MODEL.json"
+    p.write_text(json.dumps({"format_version": 1,
+                             "backends": {"cpu": m.to_dict()}}))
+    back = CostModel.load(str(p), backend="cpu")
+    assert back.to_dict() == m.to_dict()
+    # a backend with no fitted entry falls back to the sole fitted one
+    tpu = CostModel.load(str(p), backend="tpu")
+    assert tpu.backend == "cpu"
+    assert tpu.us_per_gb == 3.0
+
+
+def test_committed_model_loads_and_prices():
+    """The repo-root COST_MODEL.json must stay loadable and produce
+    finite positive predictions for every bundled net."""
+    m = CostModel.load()
+    for name in NETWORKS:
+        plan = compile_plan(NETWORKS[name](), method=SIMD, fuse=True)
+        us = plan_cost(plan, m, batch=8).us
+        assert us > 0
+
+
+# ------------------------------------------------------------- spearman
+
+def test_spearman_perfect_and_inverted():
+    assert spearman([1, 2, 3, 4], [10, 20, 30, 40]) == pytest.approx(1.0)
+    assert spearman([1, 2, 3, 4], [40, 30, 20, 10]) == pytest.approx(-1.0)
+
+
+def test_spearman_is_rank_only():
+    # wildly nonlinear but monotone -> still 1.0
+    assert spearman([1, 2, 3, 4], [1, 100, 1e4, 1e8]) == pytest.approx(1.0)
+
+
+def test_spearman_degenerate_and_mismatch():
+    assert spearman([1.0], [2.0]) == 0.0
+    assert spearman([1, 2, 3], [5, 5, 5]) == 0.0
+    with pytest.raises(ValueError):
+        spearman([1, 2], [1, 2, 3])
+
+
+def test_spearman_ties_average():
+    assert spearman([1, 2, 2, 3], [1, 2, 2, 3]) == pytest.approx(1.0)
+
+
+# ------------------------------------------------------- fitting (NNLS)
+
+def test_fit_recovers_known_coefficients():
+    """A consistent synthetic system — us generated from known positive
+    coefficients — must be recovered (near-)exactly by the relative
+    least-squares fit."""
+    a, b, gb, disp = 120.0, 40.0, 10.0, 2.0
+    rows = []
+    feats = [(1e9, 0.0, 1e9, 3), (0.0, 2e9, 2e9, 5), (3e9, 1e9, 0.5e9, 2),
+             (2e9, 2e9, 4e9, 8), (5e9, 0.5e9, 1e9, 1), (0.5e9, 4e9, 3e9, 6)]
+    for fa, fb, hbm, d in feats:
+        us = a * fa * 1e-9 + b * fb * 1e-9 + gb * hbm * 1e-9 + disp * d
+        rows.append({"flops_by_key": {"basic_simd": fa,
+                                      "advanced_simd_8": fb},
+                     "hbm_bytes": hbm, "dispatches": d, "us": us})
+    m = fit_coefficients(rows, backend="synthetic")
+    assert m.us_per_gflop["basic_simd"] == pytest.approx(a, rel=1e-6)
+    assert m.us_per_gflop["advanced_simd_8"] == pytest.approx(b, rel=1e-6)
+    assert m.us_per_gb == pytest.approx(gb, rel=1e-6)
+    assert m.dispatch_us == pytest.approx(disp, rel=1e-6)
+    for r in rows:
+        assert m.predict(r["flops_by_key"], r["hbm_bytes"],
+                         r["dispatches"]) == pytest.approx(r["us"], rel=1e-6)
+
+
+def test_fit_unobserved_buckets_get_conservative_fallback():
+    rows = [{"flops_by_key": {"basic_simd": f}, "hbm_bytes": 0.0,
+             "dispatches": 0, "us": 50.0 * f * 1e-9}
+            for f in (1e9, 2e9, 4e9)]
+    m = fit_coefficients(rows, backend="t")
+    assert m.us_per_gflop["basic_simd"] == pytest.approx(50.0, rel=1e-6)
+    # never-measured methods price at the LARGEST fitted coefficient —
+    # expensive until proven otherwise, so the tuner never chases them
+    assert m.us_per_gflop["seq_ref"] == pytest.approx(
+        m.us_per_gflop["basic_simd"])
+    assert set(m.us_per_gflop) == set(FLOP_KEYS)
+
+
+def test_fit_never_emits_negative_coefficients():
+    # an inconsistent system that plain lstsq resolves with a negative
+    # coefficient — the pruning loop must drop it instead
+    rows = [
+        {"flops_by_key": {"basic_simd": 1e9, "advanced_simd_8": 1e9},
+         "hbm_bytes": 1e9, "dispatches": 1, "us": 100.0},
+        {"flops_by_key": {"basic_simd": 2e9, "advanced_simd_8": 2e9},
+         "hbm_bytes": 2e9, "dispatches": 2, "us": 180.0},
+        {"flops_by_key": {"basic_simd": 1e9, "advanced_simd_8": 3e9},
+         "hbm_bytes": 1e9, "dispatches": 4, "us": 90.0},
+    ]
+    m = fit_coefficients(rows, backend="t")
+    assert all(v >= 0 for v in m.us_per_gflop.values())
+    assert m.us_per_gb >= 0 and m.dispatch_us >= 0
+
+
+# --------------------------------------------------- cost gate in plans
+
+def test_cost_gate_unit_model_matches_default_grouping():
+    """Under unit coefficients fusion always saves bytes + dispatches at
+    equal FLOPs, so the gated plan reproduces the heuristic grouping."""
+    net = NETWORKS["alexnet"]()
+    default = compile_plan(net, method=SIMD, fuse=True)
+    gated = compile_plan(net, method=SIMD, fuse=True,
+                         cost_gate=fusion_cost_gate(batch=8))
+    assert ([s.kind for s in gated.steps]
+            == [s.kind for s in default.steps])
+    assert not verify_plan(gated)
+
+
+def test_cost_gate_can_decline_all_fusion():
+    """A model that prices fused dispatches punitively must push the
+    planner down its fallback ladder to a fully unfused plan — the
+    decision the raw VMEM check structurally cannot make."""
+    coeffs = {k: 1.0 for k in FLOP_KEYS}
+    for meth in (Method.BASIC_SIMD, Method.ADVANCED_SIMD_4,
+                 Method.ADVANCED_SIMD_8):
+        coeffs[fused_flop_key(meth)] = 1e6
+    punitive = CostModel(backend="t", us_per_gflop=coeffs,
+                         us_per_gb=1.0, dispatch_us=1.0)
+    plan = compile_plan(NETWORKS["lenet5"](), method=SIMD, fuse=True,
+                        cost_gate=fusion_cost_gate(punitive, batch=8))
+    kinds = {s.kind for s in plan.steps}
+    assert "fused" not in kinds and "chain" not in kinds
+    assert "conv" in kinds
+    assert not verify_plan(plan)
+
+
+def test_cost_gate_pallas_still_enforces_vmem():
+    """The cost gate composes WITH the VMEM feasibility check on the
+    Pallas path — a fast-but-infeasible group must not be admitted."""
+    net = NETWORKS["alexnet"]()
+    plan = compile_plan(net, method=SIMD, fuse=True, use_pallas=True,
+                        cost_gate=fusion_cost_gate(use_pallas=True))
+    assert not [f for f in verify_plan(plan) if f.severity == "error"]
+
+
+# ----------------------------------------------------------- knob space
+
+def test_knob_space_axes():
+    net = NETWORKS["lenet5"]()
+    space = knob_space(net)
+    assert set(space) == {"conv1", "pool1", "conv2", "pool2"}
+    c1 = space["conv1"]
+    assert all(m in c1["methods"] for m in (Method.BASIC_SIMD,
+                                            Method.ADVANCED_SIMD_4,
+                                            Method.ADVANCED_SIMD_8))
+    # oh_block candidates stay below the layer's output height (24)
+    assert None in c1["oh_blocks"]
+    assert all(b < 24 for b in c1["oh_blocks"] if b is not None)
+    assert set(b for b in c1["oh_blocks"] if b is not None) <= \
+        set(OH_BLOCK_CANDIDATES)
+    assert c1["fuse"] == [True, False]
+    assert space["pool1"] == {"fuse": [True, False]}
+
+
+# -------------------------------------------- tuned-knobs deploy round-trip
+
+TUNED = {
+    "method": Method.ADVANCED_SIMD_8,
+    "per_layer_methods": {"conv1": Method.ADVANCED_SIMD_4},
+    "oh_block": None,
+    "per_layer_oh_blocks": {"conv2": 8},
+    "fuse": True,
+    "fuse_relu": True,
+    "per_layer_fuse": {"pool2": False},
+    "use_pallas": False,
+}
+
+
+def test_knobs_manifest_roundtrip():
+    d = deploy.knobs_to_manifest(TUNED)
+    json.dumps(d)  # must be json-serializable as-is
+    back = deploy.knobs_from_manifest(d)
+    assert back == TUNED
+    assert isinstance(back["method"], Method)
+    assert isinstance(back["per_layer_methods"]["conv1"], Method)
+
+
+def test_knobs_to_manifest_rejects_unknown_keys():
+    with pytest.raises(ValueError):
+        deploy.knobs_to_manifest({**TUNED, "warp_speed": 9})
+
+
+def test_deploy_tuned_plan_roundtrip(tmp_path, lenet_params):
+    net = NETWORKS["lenet5"]()
+    out = tmp_path / "tuned"
+    deploy.save_model(out, net, lenet_params, tuned=TUNED)
+    assert deploy.load_tuned_knobs(out) == TUNED
+    # load_model recompiles + verifies the tuned plan on load
+    net2, params2, _extra = deploy.load_model(out)
+    assert net2.name == net.name
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["tuned_plan"] == deploy.knobs_to_manifest(TUNED)
+    engine, _, knobs = deploy.load_engine(out)
+    assert knobs == TUNED
+    plan = engine.plan()
+    assert any(s.method == Method.ADVANCED_SIMD_4 for s in plan.steps
+               if "conv1" in s.names)
+
+
+def test_deploy_without_tuned_plan_stays_compatible(tmp_path, lenet_params):
+    net = NETWORKS["lenet5"]()
+    out = tmp_path / "plain"
+    deploy.save_model(out, net, lenet_params)
+    assert deploy.load_tuned_knobs(out) is None
+    engine, _, knobs = deploy.load_engine(out)
+    assert knobs is None
+
+
+@pytest.fixture(scope="module")
+def lenet_params():
+    import jax
+
+    from repro.core.engine import CNNEngine
+
+    return CNNEngine(NETWORKS["lenet5"]()).init(jax.random.PRNGKey(0))

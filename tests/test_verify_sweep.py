@@ -1,0 +1,97 @@
+"""Tests for the CI plan-verifier sweep gate (``tools/verify_sweep.py``).
+
+The sweep is the static gate that keeps every bundled reference network
+verifying spotless across the full method × fuse × backend grid.  These
+tests pin its contract: exit 0 and an empty finding list on the bundled
+registry, exit 1 the moment ANY finding appears (exercised with a
+seeded-defect netdef injected through ``sweep(networks=...)``), and the
+markdown table CI posts to the step summary.
+"""
+import dataclasses
+import importlib.util
+import json
+import pathlib
+
+from repro.core.netdefs import NETWORKS
+
+_TOOL = pathlib.Path(__file__).resolve().parent.parent / "tools" / \
+    "verify_sweep.py"
+_spec = importlib.util.spec_from_file_location("verify_sweep", _TOOL)
+verify_sweep = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(verify_sweep)
+
+
+def _broken_lenet5():
+    """lenet5 with a num_classes the fc tail cannot land on — every
+    compiled plan draws the V102 classifier-tail warning."""
+    net = NETWORKS["lenet5"]()
+    return dataclasses.replace(net, num_classes=7)
+
+
+# ---------------------------------------------------------------- sweep
+
+def test_sweep_single_injected_net_is_clean():
+    findings, combos = verify_sweep.sweep({"lenet5": NETWORKS["lenet5"]})
+    # 3 methods × 2 fuse × 2 backends
+    assert combos == 12
+    assert findings == []
+
+
+def test_sweep_defaults_to_bundled_registry():
+    findings, combos = verify_sweep.sweep()
+    assert combos == 12 * len(NETWORKS)
+    assert findings == []
+
+
+def test_sweep_seeded_defect_yields_findings():
+    findings, combos = verify_sweep.sweep({"bad": _broken_lenet5})
+    assert combos == 12
+    # every configuration of the defective net trips the V102 tail check
+    assert len(findings) == 12
+    assert all(f.rule == "V102" for f in findings)
+    assert all(f.severity == "warning" for f in findings)
+    # the finding location carries the sweep tag so one table row
+    # identifies the exact failing configuration
+    assert any(f.step.startswith("bad/basic_simd/fuse=False/pallas=False")
+               for f in findings)
+
+
+# ----------------------------------------------------------- exit codes
+
+def test_main_clean_registry_exits_zero(capsys):
+    assert verify_sweep.main([]) == 0
+    out = capsys.readouterr().out
+    assert "0 finding(s)" in out
+
+
+def test_main_seeded_defect_exits_one(capsys, monkeypatch):
+    monkeypatch.setattr(verify_sweep, "NETWORKS", {"bad": _broken_lenet5})
+    assert verify_sweep.main([]) == 1
+    out = capsys.readouterr().out
+    assert "12 finding(s)" in out
+    assert "V102" in out
+
+
+# ------------------------------------------------------------ rendering
+
+def test_main_md_table(capsys, monkeypatch):
+    monkeypatch.setattr(verify_sweep, "NETWORKS", {"bad": _broken_lenet5})
+    assert verify_sweep.main(["--md"]) == 1
+    out = capsys.readouterr().out
+    assert out.startswith("### Plan verifier sweep")
+    assert "| severity | rule | where | detail |" in out
+    assert "| warning | V102 |" in out
+
+
+def test_main_md_clean(capsys):
+    assert verify_sweep.main(["--md"]) == 0
+    out = capsys.readouterr().out
+    assert "No findings." in out
+
+
+def test_main_json_output(capsys, monkeypatch):
+    monkeypatch.setattr(verify_sweep, "NETWORKS", {"bad": _broken_lenet5})
+    assert verify_sweep.main(["--json"]) == 1
+    rows = json.loads(capsys.readouterr().out)
+    assert len(rows) == 12
+    assert {r["rule"] for r in rows} == {"V102"}

@@ -1,0 +1,272 @@
+#!/usr/bin/env python
+"""Offline autotuner: search the compiled-plan knob space with the
+analytic cost model, persist the winner into a deploy manifest.
+
+Coordinate-descent over ``plan.knob_space`` (per-conv method, per-layer
+``oh_block`` band, per-layer fusion opt-outs), starting from the default
+heuristic configuration.  Every candidate is compiled through
+``compile_plan(verify=True)`` — a knob set whose plan fails the static
+verifier with error findings is REJECTED outright, whatever the model
+says — and scored by ``repro.core.cost`` under the committed
+``COST_MODEL.json``.  Only strict predicted improvements are accepted,
+so the tuned plan's modelled cost is ≤ the default plan's by
+construction and the searched decisions never regress the heuristics.
+
+The winning knob set is written into the deploy manifest
+(``manifest["tuned_plan"]`` via ``deploy.save_model(tuned=...)``) and
+the tool re-loads its own artifact to prove the round-trip: the
+reconstructed knobs must be byte-exact, the reconstructed plan must
+verify with zero error findings, and its modelled cost must not exceed
+the default plan's.  Any violation exits non-zero — CI runs this as a
+gate, not a report:
+
+    PYTHONPATH=src python tools/autotune.py --net lenet5 --smoke \
+        --out tuned-lenet5
+
+Exit codes: 0 = tuned artifact written and self-checked; 1 = a tuned-
+plan gate failed; 2 = usage/input error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.verifier import PlanVerificationError, verify_plan
+from repro.core import deploy
+from repro.core.cost import CostModel, PlanCost, plan_cost
+from repro.core.methods import Method
+from repro.core.netdefs import NETWORKS
+from repro.core.plan import compile_plan, knob_space
+
+#: accept a move only when it improves the prediction by this relative
+#: margin — float noise must not churn the tuned configuration
+EPSILON = 1e-6
+
+
+def default_knobs(use_pallas: bool = False) -> Dict:
+    """The heuristic configuration every engine starts from — the
+    baseline the tuned plan must beat (or match)."""
+    return {
+        "method": Method.ADVANCED_SIMD_8,
+        "per_layer_methods": {},
+        "oh_block": None,
+        "per_layer_oh_blocks": {},
+        "fuse": True,
+        "fuse_relu": True,
+        "per_layer_fuse": {},
+        "use_pallas": use_pallas,
+    }
+
+
+def score(net, knobs: Dict, model: CostModel,
+          batch: int) -> Tuple[Optional[object], Optional[PlanCost]]:
+    """Compile + verify + price one candidate.  ``(None, None)`` for a
+    candidate the static verifier rejects with error findings — the
+    search never considers it, however fast the model thinks it is."""
+    try:
+        plan = compile_plan(net, verify=True, **knobs)
+    except PlanVerificationError:
+        return None, None
+    return plan, plan_cost(plan, model, batch)
+
+
+def tune(net, model: CostModel, batch: int = 8, use_pallas: bool = False,
+         passes: int = 2) -> Dict:
+    """Greedy coordinate descent from the default configuration.  Each
+    pass walks every layer's candidate axes (method, oh_block, fuse) and
+    keeps a move only when the verified candidate strictly improves the
+    predicted cost.  Returns the tune record: knobs, costs, decisions."""
+    space = knob_space(net)
+    knobs = default_knobs(use_pallas)
+    base_plan, base_cost = score(net, knobs, model, batch)
+    if base_plan is None:
+        raise RuntimeError(
+            f"default plan for {net.name} fails static verification")
+    best = base_cost.us
+    decisions: List[Dict] = []
+
+    def try_move(layer: str, axis: str, value, mutate) -> bool:
+        nonlocal best, knobs
+        cand = {**knobs,
+                "per_layer_methods": dict(knobs["per_layer_methods"]),
+                "per_layer_oh_blocks": dict(knobs["per_layer_oh_blocks"]),
+                "per_layer_fuse": dict(knobs["per_layer_fuse"])}
+        mutate(cand)
+        _, cost = score(net, cand, model, batch)
+        if cost is None or cost.us >= best * (1.0 - EPSILON):
+            return False
+        decisions.append({"layer": layer, "axis": axis,
+                          "value": value if not isinstance(value, Method)
+                          else value.value,
+                          "us_before": round(best, 1),
+                          "us_after": round(cost.us, 1)})
+        knobs, best = cand, cost.us
+        return True
+
+    for _ in range(max(1, passes)):
+        improved = False
+        for name, axes in space.items():
+            for m in axes.get("methods", ()):
+                improved |= try_move(
+                    name, "method", m,
+                    lambda c, n=name, m=m: c["per_layer_methods"]
+                    .__setitem__(n, m))
+            for b in axes.get("oh_blocks", ()):
+                if b is None:
+                    continue  # the default auto band is the start point
+                improved |= try_move(
+                    name, "oh_block", b,
+                    lambda c, n=name, b=b: c["per_layer_oh_blocks"]
+                    .__setitem__(n, b))
+            if False in axes.get("fuse", ()):
+                improved |= try_move(
+                    name, "fuse", False,
+                    lambda c, n=name: c["per_layer_fuse"]
+                    .__setitem__(n, False))
+        if not improved:
+            break
+
+    plan, cost = score(net, knobs, model, batch)
+    return {
+        "net": net.name, "batch": batch, "use_pallas": use_pallas,
+        "knobs": knobs, "plan": plan, "cost": cost,
+        "default_cost": base_cost, "decisions": decisions,
+    }
+
+
+def decision_table(result: Dict, model: CostModel) -> str:
+    """The per-layer decision table (markdown) CI posts to the step
+    summary: what each step of the tuned plan runs, and the search moves
+    that got there."""
+    knobs = result["knobs"]
+    lines = [f"### Autotune — {result['net']} "
+             f"(batch {result['batch']}, "
+             f"{'pallas' if result['use_pallas'] else 'xla'}, "
+             f"model backend `{model.backend}`)", "",
+             "| step | kind | method | oh_block | fused into | pred us |",
+             "|---|---|---|---|---|---:|"]
+    for step, sc in zip(result["plan"].steps, result["cost"].steps):
+        meth = step.method.value if step.method is not None else ""
+        ohb = "auto" if step.oh_block is None else str(step.oh_block)
+        if step.kind not in ("conv", "fused", "chain"):
+            ohb = ""
+        grp = "+".join(step.names) if step.kind in ("fused", "chain") else ""
+        lines.append(f"| {'+'.join(step.names)} | {step.kind} | {meth} "
+                     f"| {ohb} | {grp} | {sc.us:.1f} |")
+    d, t = result["default_cost"].us, result["cost"].us
+    lines += ["",
+              f"- default heuristic plan: **{d:.1f} us** (modelled)",
+              f"- tuned plan: **{t:.1f} us** (modelled, "
+              f"{d / t if t else 1.0:.2f}x)",
+              f"- accepted moves: {len(result['decisions'])}"]
+    for mv in result["decisions"]:
+        lines.append(f"  - `{mv['layer']}` {mv['axis']} → `{mv['value']}` "
+                     f"({mv['us_before']} → {mv['us_after']} us)")
+    return "\n".join(lines)
+
+
+def write_and_check(result: Dict, model: CostModel, out: str) -> int:
+    """Persist the tuned artifact and prove the acceptance criteria on
+    the RELOADED copy: byte-exact knob round-trip, zero error findings,
+    modelled cost ≤ the default plan's.  Returns the exit code."""
+    import jax
+
+    from repro.core.engine import CNNEngine
+
+    net = result["plan"].net
+    engine = CNNEngine(net)
+    params = engine.init(jax.random.PRNGKey(0))
+    deploy.save_model(out, net, params, tuned=result["knobs"],
+                      extra={"autotune": {
+                          "modelled_us": round(result["cost"].us, 1),
+                          "default_modelled_us":
+                              round(result["default_cost"].us, 1),
+                          "batch": result["batch"],
+                          "model_backend": model.backend}})
+
+    saved = json.dumps(deploy.knobs_to_manifest(result["knobs"]),
+                       sort_keys=True)
+    loaded_knobs = deploy.load_tuned_knobs(out)
+    loaded = json.dumps(deploy.knobs_to_manifest(loaded_knobs),
+                        sort_keys=True)
+    if saved != loaded:
+        print(f"FAIL: tuned knobs did not round-trip byte-exactly:\n"
+              f"  saved:  {saved}\n  loaded: {loaded}", file=sys.stderr)
+        return 1
+    plan = compile_plan(net, verify=False, **loaded_knobs)
+    errors = [f for f in verify_plan(plan) if f.severity == "error"]
+    if errors:
+        print(f"FAIL: reloaded tuned plan has {len(errors)} error "
+              f"finding(s): {errors}", file=sys.stderr)
+        return 1
+    reloaded_us = plan_cost(plan, model, result["batch"]).us
+    default_us = result["default_cost"].us
+    if reloaded_us > default_us * (1.0 + EPSILON):
+        print(f"FAIL: tuned plan modelled cost {reloaded_us:.1f} us exceeds "
+              f"default {default_us:.1f} us", file=sys.stderr)
+        return 1
+    print(f"tuned artifact written to {out} "
+          f"(modelled {reloaded_us:.1f} us vs default {default_us:.1f} us)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--net", default="lenet5",
+                    help=f"network to tune ({', '.join(sorted(NETWORKS))})")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="batch size the cost is modelled at")
+    ap.add_argument("--model", default=None,
+                    help="COST_MODEL.json path (default: repo root)")
+    ap.add_argument("--backend", default="cpu",
+                    help="coefficient backend to price with")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="tune the Pallas path (band geometry + VMEM "
+                         "feasibility enter the search)")
+    ap.add_argument("--passes", type=int, default=2,
+                    help="coordinate-descent passes over the knob space")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single-pass quick search (the CI gate)")
+    ap.add_argument("--out", default=None,
+                    help="write the tuned deploy artifact to this directory "
+                         "and self-check the round-trip")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="dump the tune record as JSON to this path")
+    args = ap.parse_args(argv)
+
+    if args.net not in NETWORKS:
+        print(f"error: unknown network {args.net!r} "
+              f"(have: {', '.join(sorted(NETWORKS))})", file=sys.stderr)
+        return 2
+    try:
+        model = CostModel.load(args.model, backend=args.backend)
+    except (OSError, json.JSONDecodeError, KeyError) as e:
+        print(f"error: cannot load cost model: {e}", file=sys.stderr)
+        return 2
+
+    net = NETWORKS[args.net]()
+    result = tune(net, model, batch=args.batch, use_pallas=args.use_pallas,
+                  passes=1 if args.smoke else args.passes)
+    print(decision_table(result, model))
+
+    if args.json_out:
+        record = {
+            "net": result["net"], "batch": result["batch"],
+            "use_pallas": result["use_pallas"],
+            "tuned_plan": deploy.knobs_to_manifest(result["knobs"]),
+            "modelled_us": round(result["cost"].us, 1),
+            "default_modelled_us": round(result["default_cost"].us, 1),
+            "decisions": result["decisions"],
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+
+    if args.out:
+        return write_and_check(result, model, args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -199,7 +199,31 @@ def main(argv=None) -> int:
                     help="exit 1 when any row regresses past the tolerance "
                          "(CI: set on main, leave off on PRs)")
     args = ap.parse_args(argv)
-    prev, cur = load(args.prev), load(args.cur)
+    # a malformed CURRENT file is always an error: the thing under test
+    # did not produce a readable artifact
+    try:
+        cur = load(args.cur)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"::error::current bench artifact {args.cur} is unreadable: "
+              f"{e}", file=sys.stderr)
+        return 2
+    # a malformed BASELINE is a gate verdict, not an infrastructure
+    # traceback: with --fail-on-regress the gate cannot render its
+    # verdict, so it fails loudly; without the flag (PR mode) the
+    # baseline resets and every row reports "new"
+    try:
+        prev = load(args.prev)
+    except (OSError, json.JSONDecodeError) as e:
+        if args.fail_on_regress:
+            print(f"::error::baseline bench artifact {args.prev} is "
+                  f"unreadable ({e}) — the regression gate cannot run; "
+                  f"regenerate the baseline (workflow_dispatch on main) "
+                  f"or re-run without --fail-on-regress", file=sys.stderr)
+            return 2
+        print(f"::warning::baseline bench artifact {args.prev} is "
+              f"unreadable ({e}) — baseline reset, all rows report as new",
+              file=sys.stderr)
+        prev = {}
     note = ""
     mismatch = config_mismatch(prev, cur)
     if mismatch:

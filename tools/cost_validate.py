@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Cost-model accuracy gate: predicted vs measured rank correlation.
+
+For every ladder row in a measured ``BENCH_network.json`` (network ×
+method × fused/unfused), recompile the plan exactly as the bench ran it,
+price it with the committed ``COST_MODEL.json``, and compute the
+Spearman rank correlation between predicted and measured
+``us_per_call`` across ALL rows.  The model's job is to ORDER candidate
+plans for the autotuner — rank fidelity is the contract, absolute
+microseconds are not.  Serving rows (``cnn_server``) are queue p50s,
+not per-call kernel time, and are excluded.
+
+CI runs this after the smoke bench: ``--warn-only`` on PRs (a drifting
+model warns), gating on main (a drifting model fails — refit with
+``python -m benchmarks.cost_fit`` and commit the refreshed model):
+
+    PYTHONPATH=src python tools/cost_validate.py BENCH_network.json \
+        --threshold 0.8 --md
+
+Exit codes: 0 = rank correlation meets the threshold (or --warn-only);
+1 = below threshold; 2 = unreadable inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from repro.core.cost import CostModel  # noqa: E402
+
+from benchmarks.cost_fit import bench_backend, ladder_points  # noqa: E402
+
+
+def validate(bench: dict, model: CostModel) -> dict:
+    """Predicted-vs-measured record for every ladder row, plus the
+    overall and per-network Spearman rank correlations."""
+    from repro.core.cost import spearman
+
+    pts = ladder_points(bench)
+    rows = []
+    for p in pts:
+        pred = model.predict(p["flops_by_key"], p["hbm_bytes"],
+                             p["dispatches"])
+        rows.append({"id": p["id"], "predicted_us": pred,
+                     "measured_us": p["us"]})
+    rho = spearman([r["predicted_us"] for r in rows],
+                   [r["measured_us"] for r in rows])
+    per_net = {}
+    for net in sorted({r["id"].split("/")[0] for r in rows}):
+        sub = [r for r in rows if r["id"].split("/")[0] == net]
+        per_net[net] = spearman([r["predicted_us"] for r in sub],
+                                [r["measured_us"] for r in sub])
+    return {"rows": rows, "spearman": rho, "per_network": per_net}
+
+
+def markdown(report: dict, threshold: float, backend: str) -> str:
+    ok = report["spearman"] >= threshold
+    lines = [f"### Cost-model accuracy gate (backend `{backend}`)", "",
+             f"Spearman rank correlation over {len(report['rows'])} bench "
+             f"rows: **{report['spearman']:.4f}** "
+             f"(threshold {threshold}) — "
+             f"{'PASS' if ok else '**FAIL**'}", ""]
+    for net, rho in report["per_network"].items():
+        lines.append(f"- `{net}`: {rho:.4f}")
+    lines += ["", "| row | predicted us | measured us | ratio |",
+              "|---|---:|---:|---:|"]
+    for r in sorted(report["rows"], key=lambda r: r["measured_us"]):
+        ratio = (r["predicted_us"] / r["measured_us"]
+                 if r["measured_us"] else float("inf"))
+        lines.append(f"| {r['id']} | {r['predicted_us']:.0f} "
+                     f"| {r['measured_us']:.0f} | {ratio:.2f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", nargs="?", default="BENCH_network.json",
+                    help="measured bench artifact to validate against")
+    ap.add_argument("--model", default=None,
+                    help="COST_MODEL.json path (default: repo root)")
+    ap.add_argument("--threshold", type=float, default=0.8,
+                    help="minimum acceptable Spearman rank correlation")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report a failure but exit 0 (the PR-side mode)")
+    ap.add_argument("--md", action="store_true",
+                    help="emit the full markdown table (else a summary "
+                         "line)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.bench) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot read bench file {args.bench}: {e}",
+              file=sys.stderr)
+        return 2
+    backend, _ = bench_backend(bench)
+    try:
+        model = CostModel.load(args.model, backend=backend)
+    except (OSError, json.JSONDecodeError, KeyError) as e:
+        print(f"error: cannot load cost model: {e}", file=sys.stderr)
+        return 2
+
+    report = validate(bench, model)
+    if args.md:
+        print(markdown(report, args.threshold, model.backend))
+    else:
+        print(f"cost-model spearman={report['spearman']:.4f} over "
+              f"{len(report['rows'])} rows (threshold {args.threshold})")
+
+    if report["spearman"] >= args.threshold:
+        return 0
+    if args.warn_only:
+        # the ::warning:: line surfaces in the PR checks UI without
+        # failing the job — drift is visible before it gates on main
+        print(f"::warning::cost model rank correlation "
+              f"{report['spearman']:.4f} below threshold {args.threshold} "
+              f"— refit with benchmarks.cost_fit")
+        return 0
+    print(f"::error::cost model rank correlation {report['spearman']:.4f} "
+          f"below threshold {args.threshold} — refit with "
+          f"benchmarks.cost_fit and commit COST_MODEL.json")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

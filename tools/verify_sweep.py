@@ -27,10 +27,17 @@ from repro.core.plan import compile_plan
 METHODS = (Method.BASIC_SIMD, Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8)
 
 
-def sweep():
+def sweep(networks=None):
+    """Verify every (network × method × fuse × backend) combination.
+
+    ``networks`` maps name -> NetworkDef factory; defaults to the
+    bundled ``NETWORKS`` registry (tests inject seeded-defect netdefs
+    through it)."""
+    if networks is None:
+        networks = NETWORKS
     findings, combos = [], 0
-    for name in sorted(NETWORKS):
-        net = NETWORKS[name]()
+    for name in sorted(networks):
+        net = networks[name]()
         for method in METHODS:
             for fuse in (False, True):
                 for use_pallas in (False, True):

@@ -21,7 +21,7 @@ SEVERITIES = ("error", "warning", "info")
 
 #: rule ID -> (pass, one-line summary).  V1xx: shape/dtype flow.
 #: V2xx: band geometry / coverage.  V3xx: VMEM budget audit.
-#: R0xx: repo lint (AST).
+#: R0xx: repo lint (AST).  K1xx: kernel sanitizer (abstract interpretation).
 RULES = {
     "V101": ("verifier",
              "step output shape disagrees with its re-derivation from the "
@@ -72,6 +72,33 @@ RULES = {
              "serving/ except handler swallows a supervisor error: it "
              "must re-raise, reference its bound exception, or record a "
              "typed failure result (FailedResult/ShedResult/...)"),
+    "R007": ("lint",
+             "kernel-body astype must target the named accumulation-dtype "
+             "constant (ACC_DTYPE) or a ref's .dtype — no inline dtype "
+             "literals inside kernels/"),
+    "K100": ("sanitizer",
+             "the sanitizer could not complete its proof for a dispatch "
+             "(unsupported construct, entry raised, or internal "
+             "inconsistency) — the dispatch is unproven, not proven safe"),
+    "K101": ("sanitizer",
+             "a kernel load (x_ref/w_ref block, slice, or pl.ds) can read "
+             "outside the padded operand extents for some grid index"),
+    "K102": ("sanitizer",
+             "the union of o_ref stores does not cover every output "
+             "element exactly once across the grid (gap, overlap, or an "
+             "unguarded overwrite on an accumulation axis)"),
+    "K103": ("sanitizer",
+             "precision flow violates the fp32-accumulate contract: "
+             "accumulation not in fp32, or not exactly one downcast at "
+             "the final o_ref store"),
+    "K104": ("sanitizer",
+             "intermediate-padding rows in a chain cell are not provably "
+             "zero before the next stage consumes them (missing or "
+             "mismatched row mask)"),
+    "K105": ("sanitizer",
+             "the sanitizer's independently derived band geometry "
+             "disagrees with the resolver/verifier derivation — one of "
+             "the two redundant derivations is wrong"),
 }
 
 

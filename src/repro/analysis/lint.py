@@ -27,6 +27,12 @@ Rules (see ``findings.RULES`` / ``analysis/README.md``):
   failure), or name a typed failure result (``FailedResult`` /
   ``ShedResult`` / the engine-fault types).  A handler that does none
   of these turns a supervisor error into a silent drop.
+* **R007** — kernel-body ``astype`` discipline: inside ``kernels/``
+  functions that take ``*_ref`` parameters (Pallas kernel bodies),
+  every ``.astype(...)`` must target the named accumulation constant
+  ``ACC_DTYPE`` or a ref's ``.dtype``; inline dtype literals fork the
+  fp32-accumulate / single-downcast contract the kernel sanitizer
+  proves (K103).
 
 All rules are file-local AST walks — no imports of the linted modules,
 so the linter runs on any tree (including deliberately-broken test
@@ -317,7 +323,51 @@ def _r006(tree: ast.AST, path: str) -> List[Finding]:
     return out
 
 
-_RULES = (_r001, _r002, _r003, _r004, _r005, _r006)
+# -- R007 -------------------------------------------------------------------
+
+
+def _is_kernel_fn(fn: ast.FunctionDef) -> bool:
+    """A Pallas kernel body: any positional parameter named ``*_ref``."""
+    args = fn.args
+    params = args.posonlyargs + args.args + args.kwonlyargs
+    return any(a.arg.endswith("_ref") for a in params)
+
+
+def _r007(tree: ast.AST, path: str) -> List[Finding]:
+    """kernels/ astype discipline: inside a kernel body every
+    ``.astype(ARG)`` must target the named accumulation constant
+    (``ACC_DTYPE``) or a ref's ``.dtype`` — an inline dtype literal
+    (``jnp.float32``, ``"bfloat16"``) silently forks the accumulate /
+    downcast contract the sanitizer proves (K103)."""
+    if "kernels/" not in path.replace("\\", "/"):
+        return []
+    out, seen = [], set()
+    for fn in ast.walk(tree):
+        if not (isinstance(fn, ast.FunctionDef) and _is_kernel_fn(fn)):
+            continue
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args):
+                continue
+            arg = node.args[0]
+            if isinstance(arg, ast.Name) and arg.id == "ACC_DTYPE":
+                continue
+            if isinstance(arg, ast.Attribute) and arg.attr == "dtype":
+                continue
+            key = (node.lineno, node.col_offset)
+            if key in seen:  # nested kernel fns walk the same call twice
+                continue
+            seen.add(key)
+            out.append(Finding(
+                "error", _loc(path, node), "R007",
+                "kernel-body astype must target ACC_DTYPE or a ref's "
+                ".dtype — inline dtype arguments break the fp32 "
+                "accumulate/single-downcast contract"))
+    return out
+
+
+_RULES = (_r001, _r002, _r003, _r004, _r005, _r006, _r007)
 
 
 def lint_source(src: str, path: str = "<string>",

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import ACC_DTYPE
+
 NEG_INF = -1e30
 
 
@@ -50,8 +52,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(visible if not isinstance(visible, bool) else True)
     def _step():
-        q = q_ref[...].astype(jnp.float32)  # [bq, hd]
-        k = k_ref[...].astype(jnp.float32)  # [bk, hd]
+        q = q_ref[...].astype(ACC_DTYPE)  # [bq, hd]
+        k = k_ref[...].astype(ACC_DTYPE)  # [bk, hd]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -74,7 +76,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-            p, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            p, v_ref[...].astype(ACC_DTYPE), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
         m_ref[...] = m_new

@@ -1,0 +1,22 @@
+"""Kernel-wide named constants.
+
+``ACC_DTYPE`` is the accumulation dtype every Pallas kernel body
+computes in: operands are upcast to it on load, partial sums live in
+it, and exactly one downcast to ``o_ref.dtype`` happens at the final
+store.  Naming the constant (instead of writing ``jnp.float32`` inline)
+is what lets two static passes enforce the contract cheaply:
+
+* the repo lint's R007 rule accepts only ``ACC_DTYPE`` or a ref's
+  ``.dtype`` as an ``astype`` target inside kernel bodies, and
+* the kernel sanitizer's K103 precision-flow lattice resolves the name
+  to fp32 when it symbolically executes the bodies.
+
+When the quantized int8/fp16 path lands, its kernels get their own
+named accumulation constants here and both passes extend by table
+entry, not by new pattern-matching.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+ACC_DTYPE = jnp.float32

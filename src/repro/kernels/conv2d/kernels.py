@@ -88,6 +88,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import ACC_DTYPE
+
 # Target working set per grid cell — half the ~16 MB/core VMEM, leaving the
 # other half for the pipeline's double buffering.
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
@@ -306,10 +308,10 @@ def _basic_parallel_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
                     (i + (ohh - 1) * sy + 1, j + (oww - 1) * sx + 1),
                     (sy, sx),
                 )  # [OH, OW] — spatial lanes only
-                acc = acc + (patch.astype(jnp.float32)[None] *
-                             w_ref[:, ci, i, j].astype(jnp.float32)
+                acc = acc + (patch.astype(ACC_DTYPE)[None] *
+                             w_ref[:, ci, i, j].astype(ACC_DTYPE)
                              [:, None, None])
-    acc = acc + b_ref[...].astype(jnp.float32)[:, None, None]
+    acc = acc + b_ref[...].astype(ACC_DTYPE)[:, None, None]
     if relu:
         acc = jnp.maximum(acc, 0.0)
     o_ref[...] = acc.astype(o_ref.dtype)
@@ -467,11 +469,11 @@ def _basic_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx, relu,
                 (sy, sx, 1),
             ).reshape(ohh * oww, -1)  # [rows, C] — C on the lane axis
             acc = acc + jnp.dot(
-                patch.astype(jnp.float32),
-                w_ref[i, j].astype(jnp.float32),
+                patch.astype(ACC_DTYPE),
+                w_ref[i, j].astype(ACC_DTYPE),
                 preferred_element_type=jnp.float32,
             )  # vectorized dot over channels (the paper's 4-wide, here 128)
-    acc = acc + b_ref[...].astype(jnp.float32)
+    acc = acc + b_ref[...].astype(ACC_DTYPE)
     if pool is not None:  # fused super-layer: pool in VMEM, write pooled band
         _pool_epilogue(acc, o_ref, pool, relu, lrn)
         return
@@ -561,9 +563,9 @@ def _advanced_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
                 (sy, sx, 1),
             ).reshape(ohh * oww, -1))
     patches = jnp.concatenate(cols, axis=-1)  # [rows, KH*KW*C]
-    acc = jnp.dot(patches.astype(jnp.float32), w_ref[...].astype(jnp.float32),
+    acc = jnp.dot(patches.astype(ACC_DTYPE), w_ref[...].astype(ACC_DTYPE),
                   preferred_element_type=jnp.float32)  # one MXU matmul
-    acc = acc + b_ref[...].astype(jnp.float32)
+    acc = acc + b_ref[...].astype(ACC_DTYPE)
     if pool is not None:  # fused super-layer: pool in VMEM, write pooled band
         _pool_epilogue(acc, o_ref, pool, relu, lrn)
         return
@@ -811,7 +813,7 @@ def _band_conv(x, w_ref, kh, kw, sy, sx, m, ow, im2col):
                     (sy, sx, 1),
                 ).reshape(m * ow, -1))
         patches = jnp.concatenate(cols, axis=-1)  # [rows, KH*KW*C]
-        return jnp.dot(patches, w_ref[...].astype(jnp.float32),
+        return jnp.dot(patches, w_ref[...].astype(ACC_DTYPE),
                        preferred_element_type=jnp.float32)
     acc = jnp.zeros((m * ow, w_ref.shape[-1]), jnp.float32)
     for i in range(kh):
@@ -822,7 +824,7 @@ def _band_conv(x, w_ref, kh, kw, sy, sx, m, ow, im2col):
                 (sy, sx, 1),
             ).reshape(m * ow, -1)
             # vectorized dot over channels per kernel position (§4.3)
-            acc = acc + jnp.dot(patch, w_ref[i, j].astype(jnp.float32),
+            acc = acc + jnp.dot(patch, w_ref[i, j].astype(ACC_DTYPE),
                                 preferred_element_type=jnp.float32)
     return acc
 
@@ -837,7 +839,7 @@ def _chain_simd_kernel(x_ref, *refs, stages, pool, lrn, im2col):
     o_ref = refs[-1]
     wb = refs[:-1]
     t = pl.program_id(1)
-    band = x_ref[0].astype(jnp.float32)
+    band = x_ref[0].astype(ACC_DTYPE)
     last = len(stages) - 1
     for si, (kh, kw, sy, sx, px, m, ow, relu, oh_valid, a, b0) in enumerate(
             stages):
@@ -845,7 +847,7 @@ def _chain_simd_kernel(x_ref, *refs, stages, pool, lrn, im2col):
             # this stage's horizontal padding, materialized in VMEM
             band = jnp.pad(band, ((0, 0), (px, px), (0, 0)))
         acc = _band_conv(band, wb[2 * si], kh, kw, sy, sx, m, ow, im2col)
-        acc = acc + wb[2 * si + 1][...].astype(jnp.float32)
+        acc = acc + wb[2 * si + 1][...].astype(ACC_DTYPE)
         if si == last:
             if pool is not None:  # pool(/LRN) the final band in VMEM
                 _pool_epilogue(acc, o_ref, pool, relu, lrn)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import ACC_DTYPE
+
 
 def _act(y, act: str):
     if act == "relu":
@@ -40,7 +42,7 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, *, act: str, nk: int):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     o_ref[...] += jnp.dot(
-        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        x_ref[...].astype(ACC_DTYPE), w_ref[...].astype(ACC_DTYPE),
         preferred_element_type=jnp.float32,
     )
 
@@ -48,7 +50,7 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, *, act: str, nk: int):
     def _epilogue():  # fused bias + activation — no extra HBM pass
         y = o_ref[...]
         if b_ref is not None:
-            y = y + b_ref[...].astype(jnp.float32)
+            y = y + b_ref[...].astype(ACC_DTYPE)
         o_ref[...] = _act(y, act)
 
 

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import ACC_DTYPE
+
 from repro.kernels.conv2d.kernels import (
     VMEM_BUDGET_BYTES,
     _band_rows,
@@ -82,7 +84,7 @@ def auto_oh_block_pool(oh, ow, wp, c, kh, sy,
 def _pool2d_kernel(x_ref, o_ref, *, kh, kw, sy, sx, kind, relu):
     # x_ref: [1, BAND, WP, C] (input-row band); o_ref: [OH_BLK, OW, C]
     ohh, oww, _ = o_ref.shape
-    acc = pool_band(x_ref[0].astype(jnp.float32), ohh, oww, kh, kw, sy, sx,
+    acc = pool_band(x_ref[0].astype(ACC_DTYPE), ohh, oww, kh, kw, sy, sx,
                     kind)
     if relu:
         acc = jnp.maximum(acc, 0.0)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import ACC_DTYPE
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *, L):
     ci = pl.program_id(1)
@@ -32,11 +34,11 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *, L):
     def _init():
         state_ref[...] = jnp.zeros_like(state_ref)
 
-    r = r_ref[...].astype(jnp.float32)  # [L, e]
-    k = k_ref[...].astype(jnp.float32)
-    v = v_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)  # log decay, < 0
-    u = u_ref[...].astype(jnp.float32)  # [e]
+    r = r_ref[...].astype(ACC_DTYPE)  # [L, e]
+    k = k_ref[...].astype(ACC_DTYPE)
+    v = v_ref[...].astype(ACC_DTYPE)
+    w = w_ref[...].astype(ACC_DTYPE)  # log decay, < 0
+    u = u_ref[...].astype(ACC_DTYPE)  # [e]
     S = state_ref[...]  # [e_k, e_v]
 
     cw = jnp.cumsum(w, axis=0)  # inclusive

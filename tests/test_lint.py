@@ -244,3 +244,57 @@ except Exception:
                             latency_s=0.0, batch_size=1, bucket=1))
 """
     assert lint_source(src, path=SERVING_PATH) == []
+
+
+# -- R007: kernel-body astype discipline ------------------------------------
+
+KERNEL_PATH = "src/repro/kernels/conv2d/kernels.py"
+
+_R007_KERNEL = """
+def _my_kernel(x_ref, o_ref, *, relu):
+    acc = x_ref[0].astype({cast})
+    o_ref[...] = acc.astype(o_ref.dtype)
+"""
+
+
+def test_r007_inline_dtype_literal():
+    src = _R007_KERNEL.format(cast="jnp.float32")
+    findings = lint_source(src, path=KERNEL_PATH)
+    assert rules_of(findings) == {"R007"}
+    assert "ACC_DTYPE" in findings[0].detail
+
+
+def test_r007_string_dtype_literal():
+    src = _R007_KERNEL.format(cast='"bfloat16"')
+    assert rules_of(lint_source(src, path=KERNEL_PATH)) == {"R007"}
+
+
+def test_r007_named_constant_clean():
+    src = _R007_KERNEL.format(cast="ACC_DTYPE")
+    assert lint_source(src, path=KERNEL_PATH) == []
+
+
+def test_r007_ref_dtype_clean():
+    src = _R007_KERNEL.format(cast="o_ref.dtype")
+    assert lint_source(src, path=KERNEL_PATH) == []
+
+
+def test_r007_only_fires_in_kernel_bodies():
+    # a host-side helper (no *_ref parameter) may cast freely
+    src = """
+def host_pad(x):
+    return x.astype(jnp.float32)
+"""
+    assert lint_source(src, path=KERNEL_PATH) == []
+
+
+def test_r007_only_fires_under_kernels_tree():
+    src = _R007_KERNEL.format(cast="jnp.float32")
+    assert lint_source(src, path="src/repro/core/plan.py") == []
+
+
+def test_tools_and_benchmarks_baseline_clean():
+    """The lint default paths grew to tools/ and benchmarks/ — they must
+    stay clean too."""
+    assert lint_tree(REPO / "tools") == []
+    assert lint_tree(REPO / "benchmarks") == []

@@ -4,9 +4,10 @@
     PYTHONPATH=src python tools/lint.py [--json | --md] \
         [--fail-on-findings] [paths ...]
 
-Defaults to linting ``src/repro``.  ``--fail-on-findings`` exits 1 when
-anything at all is reported (CI uses it; locally the table alone is
-often what you want).  Rule taxonomy: ``src/repro/analysis/README.md``.
+Defaults to linting ``src/repro``, ``tools`` and ``benchmarks``.
+``--fail-on-findings`` exits 1 when anything at all is reported (CI
+uses it; locally the table alone is often what you want).  Rule
+taxonomy: ``src/repro/analysis/README.md``.
 """
 from __future__ import annotations
 
@@ -17,11 +18,14 @@ from pathlib import Path
 from repro.analysis.findings import findings_json, findings_markdown
 from repro.analysis.lint import lint_file, lint_tree
 
+DEFAULT_PATHS = ["src/repro", "tools", "benchmarks"]
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("paths", nargs="*", default=["src/repro"],
-                    help="files or directories to lint (default src/repro)")
+    ap.add_argument("paths", nargs="*", default=DEFAULT_PATHS,
+                    help="files or directories to lint "
+                         f"(default {' '.join(DEFAULT_PATHS)})")
     ap.add_argument("--json", action="store_true",
                     help="emit findings as JSON")
     ap.add_argument("--md", action="store_true",
@@ -31,7 +35,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     findings = []
-    for p in (args.paths or ["src/repro"]):
+    for p in (args.paths or DEFAULT_PATHS):
         path = Path(p)
         if path.is_dir():
             findings += lint_tree(path)

@@ -3,30 +3,92 @@ prints memory_analysis fields, the largest while-loop states, and the
 largest non-parameter tensors in the compiled HLO.
 
 Usage: PYTHONPATH=src python tools/meminspect.py <arch> <shape> [--multi-pod]
+
+The HLO-text parsing lives in pure helpers (``while_states`` /
+``largest_tensors``) so tests drive them on synthetic HLO without
+compiling anything; the 512-device XLA flags are only set on the
+compile path.  Unknown arch/shape names exit 2.
 """
-import os
+from __future__ import annotations
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
-    "while-loop-expensive-invariant-code-motion "
-)
-
+import argparse
 import re
 import sys
+from typing import List, Optional, Tuple
 
-import jax
+from repro.launch.hlo_analysis import _SHAPE_RE, shape_bytes
 
-from repro.core.config import get_arch, get_shape
-from repro.launch.dryrun import _build_step
-from repro.launch.mesh import make_production_mesh, mesh_config
-from repro.sharding.auto import rules_for
-from repro.launch.hlo_analysis import shape_bytes, _SHAPE_RE
+#: report thresholds — a while state is interesting from 0.5 GiB, an
+#: individual tensor from 0.25 GiB (diagnostic cutoffs, not the kernel
+#: VMEM budgets — those live in ``repro.kernels.conv2d.kernels``)
+WHILE_STATE_MIN_BYTES = 1 << 29
+TENSOR_MIN_BYTES = 1 << 28
+
+_WHILE_RE = re.compile(r"(?:ROOT )?%([\w.\-]+) = (\(.*?\)) while\(")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_INSTR_RE = re.compile(
+    r"\s*(?:ROOT )?%([\w.\-]+) = ([^ ]+) ([a-z][a-z0-9\-]*)\(")
 
 
-def main():
-    arch, shape_name = sys.argv[1], sys.argv[2]
-    multi = "--multi-pod" in sys.argv
+def while_states(txt: str, min_bytes: int = WHILE_STATE_MIN_BYTES,
+                 ) -> List[Tuple[int, str, Optional[str], list]]:
+    """``(total_bytes, name, trip_count, big_components)`` per while
+    loop whose carried state exceeds ``min_bytes``, in HLO-text order.
+    ``big_components`` lists the ``(bytes, "dt[dims]")`` state tensors
+    above ``TENSOR_MIN_BYTES``."""
+    out = []
+    for line in txt.splitlines():
+        m = _WHILE_RE.match(line.strip())
+        if not m:
+            continue
+        total = shape_bytes(m.group(2))
+        if total <= min_bytes:
+            continue
+        trip = _TRIP_RE.search(line)
+        parts = []
+        for dt, dims in _SHAPE_RE.findall(m.group(2)):
+            bb = shape_bytes(f"{dt}[{dims}]")
+            if bb > TENSOR_MIN_BYTES:
+                parts.append((bb, f"{dt}[{dims}]"))
+        out.append((total, m.group(1), trip.group(1) if trip else None,
+                    parts))
+    return out
+
+
+def largest_tensors(txt: str, min_bytes: int = TENSOR_MIN_BYTES,
+                    top: int = 20) -> List[Tuple[int, str, str, str]]:
+    """``(bytes, op, shape_text, name)`` of the ``top`` largest
+    non-parameter instruction results above ``min_bytes``."""
+    sizes = []
+    for line in txt.splitlines():
+        m = _INSTR_RE.match(line)
+        if m and m.group(3) != "parameter":
+            b = shape_bytes(m.group(2))
+            if b > min_bytes:
+                sizes.append((b, m.group(3), m.group(2)[:70],
+                              m.group(1)[:45]))
+    return sorted(sizes, reverse=True)[:top]
+
+
+def _compile(arch: str, shape_name: str, multi: bool):
+    """The heavy path: force the 512-device host platform and compile
+    the dry-run step.  Deferred imports keep module import side-effect
+    free (tests import the parsing helpers above)."""
+    import os
+
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+        "while-loop-expensive-invariant-code-motion "
+    )
+
+    import jax
+
+    from repro.core.config import get_arch, get_shape
+    from repro.launch.dryrun import _build_step
+    from repro.launch.mesh import make_production_mesh, mesh_config
+    from repro.sharding.auto import rules_for
+
     cfg = get_arch(arch)
     shape = get_shape(shape_name)
     mesh_cfg = mesh_config(multi)
@@ -35,36 +97,38 @@ def main():
     mesh = make_production_mesh(multi_pod=multi)
     fn, args, donate = _build_step(cfg, shape, mesh_cfg, rules)(mesh)
     with mesh:
-        compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+        return jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    try:
+        compiled = _compile(args.arch, args.shape, args.multi_pod)
+    except KeyError as e:
+        print(f"meminspect: {e.args[0] if e.args else e}", file=sys.stderr)
+        return 2
     mem = compiled.memory_analysis()
     for k in ("argument_size_in_bytes", "output_size_in_bytes",
               "temp_size_in_bytes", "alias_size_in_bytes"):
         print(f"{k:28s} {getattr(mem, k)/2**30:9.2f} GiB")
     txt = compiled.as_text()
-    print("\n=== while states > 0.5 GiB ===")
-    for line in txt.splitlines():
-        ls = line.strip()
-        m = re.match(r'(?:ROOT )?%([\w.\-]+) = (\(.*?\)) while\(', ls)
-        if m and shape_bytes(m.group(2)) > 2**29:
-            trip = re.search(r'known_trip_count[^0-9]*(\d+)', ls)
-            print(f"{shape_bytes(m.group(2))/2**30:8.2f} GiB "
-                  f"{m.group(1)[:30]} trip={trip.group(1) if trip else '?'}")
-            for dt, dims in _SHAPE_RE.findall(m.group(2)):
-                bb = shape_bytes(f"{dt}[{dims}]")
-                if bb > 2**28:
-                    print(f"          {bb/2**30:7.2f} GiB {dt}[{dims}]")
+    print(f"\n=== while states > "
+          f"{WHILE_STATE_MIN_BYTES/2**30:.1f} GiB ===")
+    for total, name, trip, parts in while_states(txt):
+        print(f"{total/2**30:8.2f} GiB {name[:30]} "
+              f"trip={trip if trip else '?'}")
+        for bb, t in parts:
+            print(f"          {bb/2**30:7.2f} GiB {t}")
     print("\n=== largest instruction results (top 20, non-param) ===")
-    sizes = []
-    for line in txt.splitlines():
-        m = re.match(r'\s*(?:ROOT )?%([\w.\-]+) = ([^ ]+) ([a-z][a-z0-9\-]*)\(',
-                     line)
-        if m and m.group(3) not in ("parameter",):
-            b = shape_bytes(m.group(2))
-            if b > 2**28:
-                sizes.append((b, m.group(3), m.group(2)[:70], m.group(1)[:45]))
-    for b, op, t, n in sorted(sizes, reverse=True)[:20]:
+    for b, op, t, _n in largest_tensors(txt):
         print(f"{b/2**30:8.2f} GiB {op:22s} {t}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -99,6 +99,12 @@ RULES = {
              "the sanitizer's independently derived band geometry "
              "disagrees with the resolver/verifier derivation — one of "
              "the two redundant derivations is wrong"),
+    "K106": ("sanitizer",
+             "VMEM scratch carry discipline violated: the carried grid "
+             "axis is not 'arbitrary', the scratch ref is overwritten "
+             "before its carried rows are consumed, or the store is not "
+             "the tail row-slice of the fresh band (stale rows would be "
+             "re-consumed by the next band step)"),
 }
 
 

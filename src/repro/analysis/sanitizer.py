@@ -115,35 +115,66 @@ def _a_resolve_oh(oh, ow, wp, c, kh, kw, sy, oc_block, oh_block,
 
 
 def _a_fused_cell(phb, ow, wp, c, kh, kw, sy, ocb, pool,
-                  im2col=True, itemsize=4):
+                  im2col=True, itemsize=4, oc_halo=0):
     pkh, pkw, psy, psx = pool
     pw = (ow - pkw) // psx + 1
     cband = _a_band(phb, pkh, psy)
     band = _a_band(cband, kh, sy)
     patch_c = kh * kw * c if im2col else c
-    return (band * wp * c + cband * ow * patch_c + kh * kw * c * ocb
-            + cband * ow * ocb + phb * pw * ocb) * itemsize
+    ocw = ocb + oc_halo
+    return (band * wp * c + cband * ow * patch_c + kh * kw * c * ocw
+            + cband * ow * ocw + phb * pw * ocw) * itemsize
 
 
 def _a_auto_ph(ph, ow, wp, c, kh, kw, sy, oc_block, pool,
-               budget=_A_VMEM_BUDGET, im2col=True):
+               budget=_A_VMEM_BUDGET, im2col=True, oc_halo=0):
     for phb in [ph] + [b for b in _A_BLOCK_CANDIDATES if b < ph]:
         if _a_fused_cell(phb, ow, wp, c, kh, kw, sy, oc_block, pool,
-                         im2col=im2col) <= budget:
+                         im2col=im2col, oc_halo=oc_halo) <= budget:
             return phb
     return 1
 
 
 def _a_resolve_ph(ph, oh, ow, wp, c, kh, kw, sy, oc_block, pool, oh_block,
-                  im2col=True):
+                  im2col=True, oc_halo=0):
     pkh, _, psy, _ = pool
     if oh_block is None:
         phb = _a_auto_ph(ph, ow, wp, c, kh, kw, sy, oc_block, pool,
-                         im2col=im2col)
+                         im2col=im2col, oc_halo=oc_halo)
     else:
         ohb = max(1, min(oh_block, oh))
         phb = max(1, (ohb - pkh) // psy + 1) if ohb >= pkh else 1
     return _a_equalize(phb, ph)
+
+
+def _a_resolve_lrn_ocb(oc, oc_block, lrn, lrn_oc_block, ow, wp, c, kh, kw,
+                       sy, pool, im2col=True):
+    """Phase-A re-derivation of the two-pass channel-halo split: the
+    ``(ocb, oc_halo)`` a fused conv→pool→LRN dispatch runs with.  Auto
+    keeps the classic full-width tile whenever the one-pooled-row floor
+    cell fits the (re-stated) budget; otherwise the oc tile shrinks and
+    every weight tile is widened by the LRN window's n-1 neighbours."""
+    if lrn is None or not im2col:
+        return (min(oc_block, oc) if im2col else oc), 0
+    blocked = min(oc_block, oc)
+    if blocked >= oc or lrn_oc_block is False:
+        return oc, 0
+    if lrn_oc_block is None and _a_fused_cell(
+            1, ow, wp, c, kh, kw, sy, oc, pool) <= _A_VMEM_BUDGET:
+        return oc, 0
+    return blocked, lrn[0] - 1
+
+
+def _a_resolve_pool_carry(pool_carry, im2col, lrn, pool, phb, n_tiles):
+    """Phase-A re-derivation of the sliding-window carry gate: adjacent
+    bands share ``K = pkh - psy`` conv rows, carried in VMEM scratch
+    when overlap exists (K >= 1), fits one band's fresh rows
+    (K <= phb*psy), and there is more than one band."""
+    if pool is None or lrn is not None or not im2col \
+            or pool_carry is False:
+        return False
+    k_rows = pool[0] - pool[2]
+    return 1 <= k_rows <= phb * pool[2] and n_tiles > 1
 
 
 def _a_chain_dims(h, w, c, chain, ocs):
@@ -179,14 +210,18 @@ def _a_chain_geom(blk, chain, pool):
     return m, offs, band, a0 * sy0, b0 * sy0
 
 
-def _a_chain_cell(blk, h, w, c, chain, ocs, pool, im2col=True, itemsize=4):
+def _a_chain_cell(blk, h, w, c, chain, ocs, pool, im2col=True, itemsize=4,
+                  oc_block_final=None):
     dims = _a_chain_dims(h, w, c, chain, ocs)
     m, _, band, _, _ = _a_chain_geom(blk, chain, pool)
+    last = len(chain) - 1
     weights = 0
     stage_peak = 0
     in_rows, in_w = band, w + 2 * chain[0][5]
     for i, ((kh, kw, sy, sx, py, px), (oh, ow, ci, oc)) in enumerate(
             zip(chain, dims)):
+        if i == last and oc_block_final is not None:
+            oc = min(oc_block_final, oc)
         weights += kh * kw * ci * oc
         patch_c = kh * kw * ci if im2col else ci
         stage_peak = max(stage_peak, in_rows * in_w * ci
@@ -194,6 +229,8 @@ def _a_chain_cell(blk, h, w, c, chain, ocs, pool, im2col=True, itemsize=4):
         if i + 1 < len(chain):
             in_rows, in_w = m[i], ow + 2 * chain[i + 1][5]
     oh_f, ow_f, _, oc_f = dims[-1]
+    if oc_block_final is not None:
+        oc_f = min(oc_block_final, oc_f)
     if pool is not None:
         pkh, pkw, psy, psx = pool
         out_stream = blk * ((ow_f - pkw) // psx + 1) * oc_f
@@ -204,17 +241,17 @@ def _a_chain_cell(blk, h, w, c, chain, ocs, pool, im2col=True, itemsize=4):
 
 
 def _a_auto_chain(target, h, w, c, chain, ocs, pool, budget=None,
-                  im2col=True):
+                  im2col=True, oc_block_final=None):
     budget = _A_CHAIN_BUDGET if budget is None else budget
     for blk in [target] + [b for b in _A_BLOCK_CANDIDATES if b < target]:
-        if _a_chain_cell(blk, h, w, c, chain, ocs, pool,
-                         im2col=im2col) <= budget:
+        if _a_chain_cell(blk, h, w, c, chain, ocs, pool, im2col=im2col,
+                         oc_block_final=oc_block_final) <= budget:
             return blk
     return 1
 
 
 def _a_resolve_chain(h, w, c, chain, ocs, pool, oh_block, im2col=True,
-                     budget=None):
+                     budget=None, oc_block_final=None):
     dims = _a_chain_dims(h, w, c, chain, ocs)
     oh_f, ow_f = dims[-1][0], dims[-1][1]
     if pool is not None:
@@ -227,7 +264,8 @@ def _a_resolve_chain(h, w, c, chain, ocs, pool, oh_block, im2col=True,
         target = oh_f
     if oh_block is None:
         blk = _a_auto_chain(target, h, w, c, chain, ocs, pool,
-                            budget=budget, im2col=im2col)
+                            budget=budget, im2col=im2col,
+                            oc_block_final=oc_block_final)
     elif pool is not None:
         ohb = max(1, min(oh_block, oh_f))
         blk = max(1, (ohb - pkh) // psy + 1) if ohb >= pkh else 1
@@ -471,19 +509,26 @@ class AArray:
     ``tainted``    arithmetic happened AFTER a downcast,
     ``from_out``   the value derives from an ``o_ref`` read (RMW),
     ``mask``       canonical row-mask key when the value is provably
-                   zero outside an affine row range (chain K104).
+                   zero outside an affine row range (chain K104),
+    ``row_slice``  ``(start, stop, dim)`` when the value is exactly a
+                   contiguous axis-0 row slice of another array (set only
+                   by ``lax.slice_in_dim(axis=0)``; any other op clears
+                   it) — the carry-discipline proof (K106) uses it to
+                   show a scratch store keeps the band's TAIL rows.
     """
 
-    __slots__ = ("shape", "dt", "downcasts", "tainted", "from_out", "mask")
+    __slots__ = ("shape", "dt", "downcasts", "tainted", "from_out", "mask",
+                 "row_slice")
 
     def __init__(self, shape, dt="io", downcasts=0, tainted=False,
-                 from_out=False, mask=None):
+                 from_out=False, mask=None, row_slice=None):
         self.shape = tuple(shape)
         self.dt = dt
         self.downcasts = downcasts
         self.tainted = tainted
         self.from_out = from_out
         self.mask = mask
+        self.row_slice = row_slice
 
     @property
     def ndim(self):
@@ -521,15 +566,21 @@ def _arr_binop(a, b, interp):
 
 
 class Ref:
-    """A VMEM block ref bound to one kernel parameter."""
+    """A VMEM block ref bound to one kernel parameter.
 
-    __slots__ = ("name", "shape", "dt", "is_out")
+    ``is_scratch`` marks a ``scratch_shapes`` VMEM ref: readable AND
+    writable, persistent across grid steps on an 'arbitrary' axis — its
+    load/store events feed the K106 carry-discipline proof instead of
+    the K102 output-coverage lattice."""
 
-    def __init__(self, name, shape, dt, is_out):
+    __slots__ = ("name", "shape", "dt", "is_out", "is_scratch")
+
+    def __init__(self, name, shape, dt, is_out, is_scratch=False):
         self.name = name
         self.shape = tuple(shape)
         self.dt = dt
         self.is_out = is_out
+        self.is_scratch = is_scratch
 
     @property
     def ndim(self):
@@ -612,16 +663,17 @@ class PallasV:
     """The configured ``pl.pallas_call(...)`` awaiting its operands."""
 
     __slots__ = ("kernel", "grid", "in_specs", "out_specs", "out_shape",
-                 "dimension_semantics")
+                 "dimension_semantics", "scratch_shapes")
 
     def __init__(self, kernel, grid, in_specs, out_specs, out_shape,
-                 dimension_semantics):
+                 dimension_semantics, scratch_shapes=None):
         self.kernel = kernel
         self.grid = grid
         self.in_specs = in_specs
         self.out_specs = out_specs
         self.out_shape = out_shape
         self.dimension_semantics = dimension_semantics
+        self.scratch_shapes = list(scratch_shapes or [])
 
 
 class ModuleHandle:
@@ -715,6 +767,7 @@ class Interp:
         self.sym_ranges: Dict[int, int] = {}
         self.guards: List[Pred] = []
         self.stores: List[Store] = []
+        self.scratch_events: List[Tuple] = []
         self.band_conv_masks: List[Any] = []
         self.line = 0
 
@@ -1303,9 +1356,32 @@ class Interp:
 
     def ref_load(self, ref, idx):
         shape = self.index_shape(ref.shape, idx, ref.name)
+        if ref.is_scratch:
+            self.scratch_events.append(
+                ("load", ref, None, tuple(self.guards), self.line))
         return AArray(shape, ref.dt, from_out=ref.is_out)
 
     def ref_store(self, ref, idx, value):
+        if ref.is_scratch:
+            # scratch carry stores feed the K106 discipline proof, not
+            # the K102 output lattice
+            if not isinstance(value, AArray):
+                raise Unsupported(
+                    f"scratch store of non-array into {ref.name}")
+            full = idx is Ellipsis or (
+                isinstance(idx, tuple) and len(idx) == 1
+                and idx[0] is Ellipsis)
+            if not full:
+                self.finding("K106", f"partial scratch store into "
+                             f"{ref.name} — the carry must replace the "
+                             "whole scratch block")
+            elif value.shape != ref.shape:
+                self.finding("K106", f"scratch store shape {value.shape} "
+                             f"does not match {ref.name}'s block "
+                             f"{ref.shape}")
+            self.scratch_events.append(
+                ("store", ref, value, tuple(self.guards), self.line))
+            return
         if not ref.is_out:
             raise Unsupported(f"store into input ref {ref.name}")
         if not isinstance(value, AArray):
@@ -1336,9 +1412,13 @@ class Interp:
             out_specs = kwargs["out_specs"]
             if isinstance(out_specs, (tuple, list)):
                 raise Unsupported("multiple output specs")
+            scratch = kwargs.get("scratch_shapes")
+            if scratch is not None and not all(
+                    isinstance(s, ShapeDtypeV) for s in scratch):
+                raise Unsupported("non-VMEM scratch_shapes entry")
             return PallasV(kernel, tuple(kwargs["grid"]),
                            list(kwargs["in_specs"]), out_specs,
-                           kwargs["out_shape"], sem)
+                           kwargs["out_shape"], sem, scratch)
         if path == "pl.BlockSpec":
             block_shape = tuple(args[0])
             index_map = args[1]
@@ -1361,6 +1441,8 @@ class Interp:
             return DS(args[0], args[1])
         if path == "pltpu.TPUCompilerParams":
             return CompilerParamsV(tuple(kwargs["dimension_semantics"]))
+        if path == "pltpu.VMEM":
+            return ShapeDtypeV(tuple(args[0]), _tag_of(args[1]))
         raise Unsupported(f"call to {path}")
 
     def call_jnp(self, name, args, kwargs):
@@ -1487,7 +1569,11 @@ class Interp:
                 start, stop = 0, dim
             shape = list(x.shape)
             shape[axis] = stop - start
-            return x.like(shape=tuple(shape), mask=None)
+            out = x.like(shape=tuple(shape), mask=None)
+            if axis == 0:
+                # contiguous row-slice provenance for the K106 proof
+                out.row_slice = (start, stop, dim)
+            return out
         if name == "broadcasted_iota":
             shape = tuple(args[1])
             return IotaV(shape, args[2])
@@ -1509,6 +1595,7 @@ class Interp:
     def analyze_dispatch(self, pv, operands):
         """The heart of Phase B: prove one ``pallas_call`` dispatch."""
         self.stores = []
+        self.scratch_events = []
         self.band_conv_masks = []
         self.guards = []
         grid = pv.grid
@@ -1606,25 +1693,31 @@ class Interp:
                             self._squeeze(spec.block_shape), op.dt, False))
         o_ref = Ref("o_ref", self._squeeze(ospec.block_shape),
                     out_sds.dt, True)
-        self._name_refs(kernel, preset_args, refs, o_ref)
+        scratch_refs = [Ref(f"scratch{i}", sv.shape, sv.dt, False, True)
+                        for i, sv in enumerate(pv.scratch_shapes)]
+        self._name_refs(kernel, preset_args, refs, o_ref, scratch_refs)
         self.call(PartialV(kernel, preset_args, preset_kw),
-                  refs + [o_ref], {})
+                  refs + [o_ref] + scratch_refs, {})
 
         self._check_store_discipline(o_ref, grid, acc_syms,
                                      pv.dimension_semantics)
+        if scratch_refs:
+            self._check_carry_discipline(scratch_refs, grid,
+                                         pv.dimension_semantics)
         stages = preset_kw.get("stages")
         if stages is not None:
             self._check_chain_masks(stages, grid)
         return AArray(out_sds.shape, out_sds.dt)
 
-    def _name_refs(self, kernel, preset_args, refs, o_ref):
+    def _name_refs(self, kernel, preset_args, refs, o_ref, scratch_refs):
         """Give refs their kernel-parameter names for findings."""
         params = [p.arg for p in kernel.node.args.args]
         params = params[len(preset_args):]
-        bound = refs + [o_ref]
+        bound = refs + [o_ref] + scratch_refs
         for name, ref in zip(params, bound):
             ref.name = name
-        if len(bound) > len(params):  # *refs vararg: last one is o_ref
+        if len(bound) > len(params) and not scratch_refs:
+            # *refs vararg: last one is o_ref
             for i, ref in enumerate(bound[len(params):-1]):
                 ref.name = f"refs[{i}]"
 
@@ -1716,6 +1809,74 @@ class Interp:
                         f"{v.dt!r} with {v.downcasts} downcast(s) — "
                         "fp32 outputs must be stored undowncast")
 
+    def _check_carry_discipline(self, scratch_refs, grid, dim_sem):
+        """K106: a VMEM scratch carry must be consumed before overwrite,
+        and the overwrite must keep the TAIL rows of the fresh band.
+
+        The carried axis is the innermost grid axis (scratch persists
+        across its steps), so it needs 'arbitrary' semantics: a parallel
+        or reordered axis would let a step read a carry its predecessor
+        has not produced yet.  Each step must (a) read the scratch
+        before writing it — the carried rows are this step's data, the
+        store is the NEXT step's — and (b) store exactly the last
+        ``scratch_rows`` rows of the fresh band (a provable tail
+        row-slice): a head slice or recomputed value would hand the next
+        band stale rows."""
+        ca = len(grid) - 1
+        sem = (dim_sem[ca] if dim_sem is not None and ca < len(dim_sem)
+               else None)
+        if sem != "arbitrary":
+            self.finding(
+                "K106",
+                f"carried grid axis g{ca} has dimension_semantics "
+                f"{sem!r} — scratch carry across steps requires "
+                "'arbitrary'")
+        for ref in scratch_refs:
+            events = [e for e in self.scratch_events if e[1] is ref]
+            if not events:
+                self.finding("K106", f"scratch ref {ref.name} is never "
+                             "accessed — dead carry allocation")
+                continue
+            if events[0][0] != "load":
+                self.finding(
+                    "K106",
+                    f"scratch ref {ref.name} is written before its "
+                    "carried rows are consumed — the carry from the "
+                    "previous band step is lost")
+            stores = [e for e in events if e[0] == "store"]
+            if not stores:
+                self.finding(
+                    "K106",
+                    f"scratch ref {ref.name} is read but never "
+                    "refreshed — every step after the first consumes "
+                    "the same stale carry")
+            for _, _, value, guards, line in stores:
+                if guards:
+                    self.finding(
+                        "K106",
+                        f"scratch store at line {line} is guarded — a "
+                        "skipped step would hand the next band a stale "
+                        "carry")
+                rs = value.row_slice
+                if rs is None:
+                    self.finding(
+                        "K106",
+                        f"scratch store at line {line} is not a "
+                        "provable contiguous row-slice of the fresh "
+                        "band — cannot prove the carry holds the "
+                        "band's boundary rows")
+                    continue
+                start, stop, dim = rs
+                rows = ref.shape[0]
+                if stop != dim or stop - start != rows:
+                    self.finding(
+                        "K106",
+                        f"scratch store at line {line} keeps rows "
+                        f"[{start}, {stop}) of a {dim}-row band — the "
+                        f"carry must be the TAIL {rows} rows "
+                        f"[{dim - rows}, {dim}); the next band step "
+                        "would consume stale rows")
+
     def _check_chain_masks(self, stages, grid):
         """K104: a stage band with possibly-garbage rows must be masked."""
         n_tiles = grid[1] if len(grid) > 1 else 1
@@ -1770,7 +1931,7 @@ def _i_plan_oh_tiles(xp, oh, kh, kw, sy, oh_block, ow, oc_block,
 
 
 def _i_plan_pool_tiles(xp, oh, ow, kh, kw, sy, oh_block, oc_block, pool,
-                       im2col=True):
+                       im2col=True, oc_halo=0):
     """Phase-A answer for the fused conv+pool band planner."""
     pkh, pkw, psy, psx = pool
     n, hp, wp, c = xp.shape
@@ -1780,7 +1941,8 @@ def _i_plan_pool_tiles(xp, oh, ow, kh, kw, sy, oh_block, oc_block, pool,
             f"pool window ({pkh},{pkw}) larger than conv output "
             f"({oh},{ow})")
     phb, n_tiles = _a_resolve_ph(ph, oh, ow, wp, c, kh, kw, sy, oc_block,
-                                 pool, oh_block, im2col=im2col)
+                                 pool, oh_block, im2col=im2col,
+                                 oc_halo=oc_halo)
     cband = _a_band(phb, pkh, psy)
     band = _a_band(cband, kh, sy)
     row_step = phb * psy * sy
@@ -1804,6 +1966,8 @@ _INTERCEPTS = {
         "resolve_oh_block": _a_resolve_oh,
         "auto_ph_block": _a_auto_ph,
         "resolve_ph_block": _a_resolve_ph,
+        "resolve_lrn_ocb": _a_resolve_lrn_ocb,
+        "resolve_pool_carry": _a_resolve_pool_carry,
         "_equalize_bands": _a_equalize,
         "_plan_oh_tiles": _i_plan_oh_tiles,
         "_plan_pool_tiles": _i_plan_pool_tiles,
@@ -1929,12 +2093,19 @@ def _run_entry(module, entry, args, kwargs, label, sources,
 def sanitize_conv2d(x_shape, w_shape, *, stride=(1, 1), padding=(0, 0),
                     relu=False, im2col=True, oc_block=128, oh_block=None,
                     pool_kernel=None, pool_stride=None, pool_kind="max",
-                    pool_relu=False, lrn=None, sources=None, label=None):
+                    pool_relu=False, lrn=None, pool_carry=None,
+                    lrn_oc_block=None, sources=None, label=None):
     """Prove one (possibly pool/LRN-fused) SIMD conv dispatch.
 
     ``x_shape`` NHWC, ``w_shape`` HWIO — pass the PADDED operand shapes
-    the engine actually dispatches.  Returns ``(findings, geom)`` where
-    ``geom`` is the Phase-A band geometry for the K105 cross-check.
+    the engine actually dispatches.  ``pool_carry``/``lrn_oc_block``
+    mirror the dispatch knobs (None = the resolvers' auto rule, re-
+    derived here by Phase A).  Returns ``(findings, geom)`` where
+    ``geom`` is the Phase-A band geometry for the K105 cross-check —
+    ``carry`` is the input rows the sliding-window accumulator carries
+    between bands (0 for classic cells) and ``steps`` the physical grid
+    steps on the band axis (``n_tiles + 1`` with carry: step 0 is the
+    sacrificial seed band).
     """
     n, h, wd, c = x_shape
     kh, kw, _, oc = w_shape
@@ -1944,27 +2115,46 @@ def sanitize_conv2d(x_shape, w_shape, *, stride=(1, 1), padding=(0, 0),
     label = label or f"{entry}[{'x'.join(map(str, x_shape))}]"
     oh, ow = _a_out(h, kh, sy, py), _a_out(wd, kw, sx, px)
     wp = wd + 2 * px
-    ocb = (oc if lrn is not None else min(oc_block, oc)) if im2col else oc
+    if pool_kernel is not None:
+        pkh, pkw = pool_kernel
+        psy, psx = pool_stride if pool_stride is not None else pool_kernel
+        pool = (pkh, pkw, psy, psx)
+    else:
+        pool = None
+    if not im2col:
+        ocb, oc_halo = oc, 0
+    elif lrn is not None and pool is not None:
+        ocb, oc_halo = _a_resolve_lrn_ocb(oc, oc_block, lrn, lrn_oc_block,
+                                          ow, wp, c, kh, kw, sy, pool)
+    elif lrn is not None:
+        ocb, oc_halo = oc, 0  # the entry raises (LRN needs a pool tail)
+    else:
+        ocb, oc_halo = min(oc_block, oc), 0
     kwargs = dict(stride=stride, padding=padding, relu=relu,
                   oh_block=oh_block, pool_kernel=pool_kernel,
                   pool_stride=pool_stride, pool_kind=pool_kind,
                   pool_relu=pool_relu, lrn=lrn)
     if im2col:
         kwargs["oc_block"] = oc_block
+        kwargs["pool_carry"] = pool_carry
+        kwargs["lrn_oc_block"] = lrn_oc_block
     if pool_kernel is not None:
-        pkh, pkw = pool_kernel
-        psy, psx = pool_stride if pool_stride is not None else pool_kernel
-        pool = (pkh, pkw, psy, psx)
         ph, pw = (oh - pkh) // psy + 1, (ow - pkw) // psx + 1
         if ph < 1 or pw < 1:
             return [Finding("error", label, "K100",
                             "pool window larger than conv output")], None
         blk, n_tiles = _a_resolve_ph(ph, oh, ow, wp, c, kh, kw, sy, ocb,
-                                     pool, oh_block, im2col=im2col)
+                                     pool, oh_block, im2col=im2col,
+                                     oc_halo=oc_halo)
+        carry_on = _a_resolve_pool_carry(pool_carry if im2col else False,
+                                         im2col, lrn, pool, blk, n_tiles)
+        carry = (pkh - psy) * sy if carry_on else 0
         geom = {"kind": "fused", "blk": blk, "n_tiles": n_tiles,
-                "total": ph, "band": _a_band(_a_band(blk, pkh, psy), kh,
-                                             sy),
-                "row_step": blk * psy * sy, "in_base": 0}
+                "total": ph,
+                "band": _a_band(_a_band(blk, pkh, psy), kh, sy) - carry,
+                "row_step": blk * psy * sy, "in_base": 0,
+                "carry": carry,
+                "steps": n_tiles + (1 if carry_on else 0)}
         expected = (n, ph, pw, oc)
     else:
         blk = _a_resolve_oh(oh, ow, wp, c, kh, kw, sy, ocb, oh_block,
@@ -1972,7 +2162,7 @@ def sanitize_conv2d(x_shape, w_shape, *, stride=(1, 1), padding=(0, 0),
         geom = {"kind": "conv", "blk": blk,
                 "n_tiles": _ceil_div(oh, blk), "total": oh,
                 "band": _a_band(blk, kh, sy), "row_step": blk * sy,
-                "in_base": 0}
+                "in_base": 0, "carry": 0, "steps": _ceil_div(oh, blk)}
         expected = (n, oh, ow, oc)
     x = AArray(x_shape, "io")
     w = AArray(w_shape, "io")
@@ -1999,7 +2189,8 @@ def sanitize_pool2d(x_shape, *, kernel=(2, 2), stride=(2, 2), kind="max",
         blk = max(1, min(oh_block, oh))
     geom = {"kind": "pool", "blk": blk, "n_tiles": _ceil_div(oh, blk),
             "total": oh, "band": _a_band(blk, kh, sy),
-            "row_step": blk * sy, "in_base": 0}
+            "row_step": blk * sy, "in_base": 0, "carry": 0,
+            "steps": _ceil_div(oh, blk)}
     x = AArray(x_shape, "io")
     findings = _run_entry(
         "pool2d", "pool2d_nhwc", [x],
@@ -2011,8 +2202,15 @@ def sanitize_pool2d(x_shape, *, kernel=(2, 2), stride=(2, 2), kind="max",
 def sanitize_chain(x_shape, w_shapes, *, strides, paddings, relus,
                    im2col=True, oh_block=None, pool_kernel=None,
                    pool_stride=None, pool_kind="max", pool_relu=False,
-                   lrn=None, sources=None, label=None):
-    """Prove one fused conv→conv(→pool→LRN) chain dispatch."""
+                   lrn=None, oc_block_final=None, sources=None,
+                   label=None):
+    """Prove one fused conv→conv(→pool→LRN) chain dispatch.
+
+    ``oc_block_final`` mirrors the dispatch knob: the final stage's oc
+    grid is blocked (its channels nothing inside the cell consumes) and
+    the Phase-A block walk re-derives the band under the shrunken
+    resident-weights model.
+    """
     n, h, wd, c = x_shape
     label = label or f"conv2d_chain_simd[{len(w_shapes)} stages]"
     chain = tuple((ws[0], ws[1], st[0], st[1], pd[0], pd[1])
@@ -2024,6 +2222,9 @@ def sanitize_chain(x_shape, w_shapes, *, strides, paddings, relus,
         pool = (pkh, pkw, psy, psx)
     else:
         pool = None
+    obf = oc_block_final
+    if obf is not None and (lrn is not None or obf >= ocs[-1]):
+        obf = None  # the dispatch normalizes/rejects identically
     try:
         dims = _a_chain_dims(h, wd, c, chain, ocs)
         oh_f, ow_f, _, oc_f = dims[-1]
@@ -2033,14 +2234,15 @@ def sanitize_chain(x_shape, w_shapes, *, strides, paddings, relus,
         else:
             target, out_cols = oh_f, ow_f
         blk, n_tiles = _a_resolve_chain(h, wd, c, chain, ocs, pool,
-                                        oh_block, im2col=im2col)
+                                        oh_block, im2col=im2col,
+                                        oc_block_final=obf)
         _, _, band, in_step, in_base = _a_chain_geom(blk, chain, pool)
     except KernelRaise as e:
         return [Finding("error", label, "K100",
                         f"chain geometry failed: {e}")], None
     geom = {"kind": "chain", "blk": blk, "n_tiles": n_tiles,
             "total": target, "band": band, "row_step": in_step,
-            "in_base": in_base}
+            "in_base": in_base, "carry": 0, "steps": n_tiles}
     x = AArray(x_shape, "io")
     ws = [AArray(s, "io") for s in w_shapes]
     bs = [AArray((s[3],), "io") for s in w_shapes]
@@ -2049,7 +2251,7 @@ def sanitize_chain(x_shape, w_shapes, *, strides, paddings, relus,
                                         relus],
         dict(im2col=im2col, oh_block=oh_block, pool_kernel=pool_kernel,
              pool_stride=pool_stride, pool_kind=pool_kind,
-             pool_relu=pool_relu, lrn=lrn),
+             pool_relu=pool_relu, lrn=lrn, oc_block_final=oc_block_final),
         label, sources, (n, target, out_cols, oc_f))
     return findings, geom
 

@@ -63,8 +63,15 @@ def check_band_coverage(geo: dict, step: str, *,
     from repro.kernels.conv2d import kernels as K
 
     blk, n_tiles, total = geo["blk"], geo["n_tiles"], geo["total"]
+    # the sliding-window carry cell re-uses ``carry`` input rows from
+    # VMEM scratch each band step, so the FRESH fetch of logical band t
+    # starts ``carry`` rows below the classic halo band (the carried
+    # rows were fetched — and convolved — by the previous physical step;
+    # step 0 is the sacrificial seed that fills the scratch)
+    carry = geo.get("carry", 0)
     out_iv, in_iv = K.band_intervals(n_tiles, blk, total, geo["row_step"],
-                                     geo["band"], base=geo["in_base"])
+                                     geo["band"],
+                                     base=geo["in_base"] + carry)
     findings: List[Finding] = []
     # V201: output bands partition [0, total) exactly once
     pos = 0
@@ -79,16 +86,22 @@ def check_band_coverage(geo: dict, step: str, *,
             "error", step, "V201",
             f"output bands {out_iv} do not partition [0, {total}) "
             f"(gap/overlap or wrong coverage)"))
-    # V205: the scalars must agree with the effective-conv model
-    want_band = (blk - 1) * geo["stride_eff"] + geo["window_eff"]
+    # V205: the scalars must agree with the effective-conv model (the
+    # carry cell's fresh band is the classic band minus the carried rows,
+    # and its sacrificial seed adds one physical grid step)
+    want_band = (blk - 1) * geo["stride_eff"] + geo["window_eff"] - carry
     want_step = blk * geo["stride_eff"]
-    if geo["band"] != want_band or geo["row_step"] != want_step:
+    want_phys = n_tiles + (1 if carry else 0)
+    if (geo["band"] != want_band or geo["row_step"] != want_step
+            or geo.get("steps", n_tiles) != want_phys):
         findings.append(Finding(
             "error", step, "V205",
-            f"band={geo['band']} row_step={geo['row_step']} inconsistent "
-            f"with blk={blk} stride_eff={geo['stride_eff']} "
-            f"window_eff={geo['window_eff']} (want band={want_band}, "
-            f"row_step={want_step})"))
+            f"band={geo['band']} row_step={geo['row_step']} "
+            f"steps={geo.get('steps', n_tiles)} inconsistent with "
+            f"blk={blk} stride_eff={geo['stride_eff']} "
+            f"window_eff={geo['window_eff']} carry={carry} "
+            f"(want band={want_band}, row_step={want_step}, "
+            f"steps={want_phys})"))
     # V202: no halo band may start above the pre-padded frame origin
     for t, (start, _rows) in enumerate(in_iv):
         if start < geo["in_base"]:
@@ -97,13 +110,26 @@ def check_band_coverage(geo: dict, step: str, *,
                 f"band {t} input start {start} is above the pre-padded "
                 f"frame origin {geo['in_base']}"))
     # V203: each halo band must contain every row its output windows read
+    # — in carry mode the first ``carry`` rows of the demand are served
+    # from scratch (band t-1's tail; band 0's from the seed step), so the
+    # fresh fetch must start EXACTLY ``carry`` rows into the demand: any
+    # other offset consumes stale or misaligned scratch rows
     for t, ((o0, o_rows), (i0, i_rows)) in enumerate(zip(out_iv, in_iv)):
         if o_rows <= 0:
             continue
         need_lo = geo["in_base"] + o0 * geo["stride_eff"]
         need_hi = (geo["in_base"] + (o0 + o_rows - 1) * geo["stride_eff"]
                    + geo["window_eff"])
-        if i0 > need_lo or i0 + i_rows < need_hi:
+        if carry:
+            if i0 - need_lo != carry or i0 + i_rows < need_hi:
+                findings.append(Finding(
+                    "error", step, "V203",
+                    f"band {t} stages fresh input rows [{i0}, "
+                    f"{i0 + i_rows}) + {carry} carried rows but its "
+                    f"output rows [{o0}, {o0 + o_rows}) read "
+                    f"[{need_lo}, {need_hi}) — carry misalignment or "
+                    f"under-fetch"))
+        elif i0 > need_lo or i0 + i_rows < need_hi:
             findings.append(Finding(
                 "error", step, "V203",
                 f"band {t} stages input rows [{i0}, {i0 + i_rows}) but its "
@@ -130,8 +156,12 @@ def step_band_params(plan: ExecutionPlan,
     from repro.kernels.conv2d.ops import SUBLANES
 
     if step.kind in ("fused", "chain"):
+        kw = step.kwargs or {}
         return (group_band_params(step.group, step.method, step.in_shape,
-                                  step.oh_block), True)
+                                  step.oh_block,
+                                  pool_carry=kw.get("pool_carry"),
+                                  lrn_oc_block=kw.get("lrn_oc_block")),
+                True)
     if step.kind == "conv" and step.method in _BANDED_METHODS:
         spec = step.spec
         c, h, w = step.in_shape
@@ -149,6 +179,7 @@ def step_band_params(plan: ExecutionPlan,
             "kind": "conv", "blk": blk, "n_tiles": -(-oh // blk),
             "total": oh, "band": K._band_rows(blk, kh, sy),
             "row_step": blk * sy, "in_base": 0, "stride_eff": sy,
+            "carry": 0, "steps": -(-oh // blk),
             "window_eff": kh, "padded_h": h + 2 * spec.padding[0],
             "cell_bytes": K.conv_cell_bytes(blk, ow, wp, cp, kh, kw, sy,
                                             ocb, im2col=im2col),
@@ -171,6 +202,7 @@ def step_band_params(plan: ExecutionPlan,
             "kind": "pool", "blk": blk, "n_tiles": -(-oh // blk),
             "total": oh, "band": K._band_rows(blk, kh, sy),
             "row_step": blk * sy, "in_base": 0, "stride_eff": sy,
+            "carry": 0, "steps": -(-oh // blk),
             "window_eff": kh, "padded_h": h,  # VALID pooling: no pad
             "cell_bytes": K.conv_cell_bytes(blk, ow, w, cp, kh, _kw, sy, 0,
                                             im2col=False),

@@ -109,9 +109,15 @@ class StepCost:
 class PlanCost:
     """A whole plan's modelled cost: per-step ``StepCost`` rows plus
     aggregate views.  ``us`` is meaningful only when built through a
-    fitted ``CostModel`` (unit coefficients otherwise)."""
+    fitted ``CostModel`` (unit coefficients otherwise).
+
+    ``model_backend``/``model_fallback_from`` echo the pricing model's
+    provenance so a table built from cross-backend borrowed
+    coefficients says so."""
     steps: Tuple[StepCost, ...]
     batch: int
+    model_backend: str = ""
+    model_fallback_from: Optional[str] = None
 
     @property
     def flops(self) -> float:
@@ -149,6 +155,12 @@ class PlanCost:
                 f"| {s.us:.1f} |")
         lines.append(f"| **total** |  |  | {self.flops / 1e9:.4f} "
                      f"| {self.hbm_bytes / 1e6:.2f} |  | {self.us:.1f} |")
+        if self.model_fallback_from:
+            lines += ["", f"> **Note**: no fitted coefficients for "
+                          f"backend `{self.model_fallback_from}` — priced "
+                          f"with the `{self.model_backend}` model "
+                          f"(cross-backend fallback; ranks usually "
+                          f"transfer, magnitudes do not)."]
         return "\n".join(lines)
 
 
@@ -157,11 +169,20 @@ class PlanCost:
 
 @dataclass(frozen=True)
 class CostModel:
-    """Fitted per-backend coefficients pricing the three resources."""
+    """Fitted per-backend coefficients pricing the three resources.
+
+    ``fallback_from`` records a cross-backend substitution made by
+    ``load``: the backend that was REQUESTED when no committed entry
+    existed for it and another backend's coefficients were returned
+    instead.  ``None`` for an exact match.  Callers pricing plans for
+    ranking can proceed (rank decisions usually transfer) but must be
+    able to surface the substitution — a silently borrowed model looks
+    identical to a calibrated one in every downstream report."""
     backend: str
     us_per_gflop: Mapping[str, float]
     us_per_gb: float
     dispatch_us: float
+    fallback_from: Optional[str] = None
 
     def predict(self, flops_by_key: Mapping[str, float], hbm_bytes: float,
                 dispatches: int) -> float:
@@ -205,9 +226,12 @@ class CostModel:
              backend: str = "cpu") -> "CostModel":
         """Load the committed ``COST_MODEL.json`` (schema:
         ``{"format_version": 1, "backends": {name: coefficients}}``).
-        Falls back to the sole fitted backend when ``backend`` has no
-        entry — coefficient magnitudes will be off cross-backend, but
-        rank decisions usually transfer."""
+        Falls back to the first fitted backend (sorted order) when
+        ``backend`` has no entry — coefficient magnitudes will be off
+        cross-backend, but rank decisions usually transfer.  The
+        substitution is recorded in ``fallback_from`` (the requested
+        backend) so reports can flag it instead of presenting borrowed
+        coefficients as calibrated."""
         p = Path(path) if path is not None else DEFAULT_MODEL_PATH
         with open(p) as f:
             data = json.load(f)
@@ -215,7 +239,8 @@ class CostModel:
         if backend in backends:
             return cls.from_dict(backends[backend], backend)
         name = sorted(backends)[0]
-        return cls.from_dict(backends[name], name)
+        return replace(cls.from_dict(backends[name], name),
+                       fallback_from=backend)
 
 
 # -- per-kind resource accounting --------------------------------------------
@@ -247,8 +272,14 @@ def _overfetch(geo: Optional[dict]) -> float:
 
     if geo is None:
         return 1.0
-    return K.band_overfetch_factor(geo["n_tiles"], geo["band"],
-                                   geo["padded_h"])
+    # physical band-axis steps × rows fetched per step.  For the classic
+    # cell steps == n_tiles and band is the full halo'd band; a
+    # sliding-window carry cell runs one extra (prologue) step but each
+    # step fetches `carry` fewer rows — the carried halo rows live in
+    # VMEM scratch and are NOT re-streamed, which is exactly the traffic
+    # win the model must see.
+    steps = geo.get("steps", geo["n_tiles"])
+    return K.band_overfetch_factor(steps, geo["band"], geo["padded_h"])
 
 
 def _group_resources(group: FusedLayerSpec, method: Optional[Method],
@@ -425,7 +456,9 @@ def plan_cost(plan: ExecutionPlan, model: Optional[CostModel] = None,
         sc = step_resources(plan, step, batch)
         steps.append(replace(
             sc, us=m.step_us(sc.key, sc.flops, sc.hbm_bytes, sc.dispatches)))
-    return PlanCost(steps=tuple(steps), batch=batch)
+    return PlanCost(steps=tuple(steps), batch=batch,
+                    model_backend=m.backend,
+                    model_fallback_from=m.fallback_from)
 
 
 # -- cost-model fusion gate --------------------------------------------------

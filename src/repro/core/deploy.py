@@ -39,7 +39,8 @@ FORMAT_VERSION = 1
 #: configuration surface (engine-side, ``fuse`` maps onto ``fuse_pool``)
 TUNED_KNOBS = ("method", "per_layer_methods", "oh_block",
                "per_layer_oh_blocks", "fuse", "fuse_relu", "per_layer_fuse",
-               "use_pallas")
+               "per_layer_pool_carry", "per_layer_lrn_oc_block",
+               "per_layer_oc_block_final", "use_pallas")
 
 
 def knobs_to_manifest(knobs: dict) -> dict:

@@ -159,6 +159,9 @@ class CNNEngine:
     per_layer_methods = _dict_knob("per_layer_methods")
     per_layer_oh_blocks = _dict_knob("per_layer_oh_blocks")
     per_layer_fuse = _dict_knob("per_layer_fuse")
+    per_layer_pool_carry = _dict_knob("per_layer_pool_carry")
+    per_layer_lrn_oc_block = _dict_knob("per_layer_lrn_oc_block")
+    per_layer_oc_block_final = _dict_knob("per_layer_oc_block_final")
 
     def __init__(self, net: NetworkDef, method: Method = Method.ADVANCED_SIMD_8,
                  use_pallas: bool = False, fuse_relu: bool = True,
@@ -166,7 +169,10 @@ class CNNEngine:
                  oh_block: Optional[int] = None,
                  per_layer_oh_blocks: Optional[Dict[str, int]] = None,
                  fuse_pool: bool = True,
-                 per_layer_fuse: Optional[Dict[str, bool]] = None):
+                 per_layer_fuse: Optional[Dict[str, bool]] = None,
+                 per_layer_pool_carry: Optional[Dict[str, bool]] = None,
+                 per_layer_lrn_oc_block: Optional[Dict[str, bool]] = None,
+                 per_layer_oc_block_final: Optional[Dict[str, int]] = None):
         self.net = net
         # plan + jit caches (created first: the knob setters below clear
         # them on every assignment, including these initial ones)
@@ -191,6 +197,11 @@ class CNNEngine:
         # mirroring per_layer_methods
         self.fuse_pool = fuse_pool
         self.per_layer_fuse = per_layer_fuse or {}
+        # second-generation fused-cell knobs (None/absent = the kernel
+        # resolvers' auto rule), keyed like per_layer_methods
+        self.per_layer_pool_carry = per_layer_pool_carry or {}
+        self.per_layer_lrn_oc_block = per_layer_lrn_oc_block or {}
+        self.per_layer_oc_block_final = per_layer_oc_block_final or {}
         self._shapes = infer_param_shapes(net)
 
     def clear_caches(self) -> None:
@@ -245,6 +256,9 @@ class CNNEngine:
                 per_layer_oh_blocks=self.per_layer_oh_blocks,
                 fuse=use_fuse, fuse_relu=self.fuse_relu,
                 per_layer_fuse=self.per_layer_fuse,
+                per_layer_pool_carry=self.per_layer_pool_carry,
+                per_layer_lrn_oc_block=self.per_layer_lrn_oc_block,
+                per_layer_oc_block_final=self.per_layer_oc_block_final,
                 use_pallas=self.use_pallas)
         return self._plans[use_fuse]
 
@@ -260,7 +274,9 @@ class CNNEngine:
     #: knob names switch_verified accepts — exactly the cache-invalidating
     #: configuration surface (the _knob/_dict_knob descriptors above)
     KNOBS = ("method", "use_pallas", "fuse_relu", "fuse_pool", "oh_block",
-             "per_layer_methods", "per_layer_oh_blocks", "per_layer_fuse")
+             "per_layer_methods", "per_layer_oh_blocks", "per_layer_fuse",
+             "per_layer_pool_carry", "per_layer_lrn_oc_block",
+             "per_layer_oc_block_final")
 
     def switch_verified(self, **knobs) -> Tuple[bool, List[Finding]]:
         """Atomically apply a candidate knob configuration, but only if

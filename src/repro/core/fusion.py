@@ -83,6 +83,11 @@ class FusedLayerSpec:
     pool_relu: bool   # ReLU after the pool (pool's own or absorbed)
     names: Tuple[str, ...]  # original layer names this group covers
     lrn: Optional[LayerSpec] = None  # trailing LRN absorbed into the cell
+    #: chain-only: oc-grid block the final stage runs with (None = full
+    #: width).  Set by the planner's admission ladder when a chain's
+    #: full-width resident weights bust the budget; incompatible with a
+    #: fused LRN tail (the kernel raises).
+    oc_block_final: Optional[int] = None
 
     kind = "fused"  # sentinel so plan items can be dispatched on .kind
 
@@ -118,17 +123,20 @@ def _pool_out_hw(h: int, w: int, spec: LayerSpec) -> Tuple[int, int]:
 
 def fused_working_set(conv: LayerSpec, pool: LayerSpec, method: Method,
                       cin: int, w_in: int, *,
-                      lrn: bool = False) -> int:
+                      lrn: bool = False,
+                      lrn_n: Optional[int] = None) -> int:
     """Modelled VMEM bytes of the smallest possible fused grid cell (one
     pooled row — one pool window of conv rows) for this conv+pool pair.
 
     Mirrors what ``conv2d.ops`` + the kernels will actually stage: the
     input channel count is padded to the sublane multiple, the advanced
     methods charge a full im2col patch matrix and the 4/8-wide oc tile
-    their fused kernel runs with — widened to the FULL output-channel
-    width when ``lrn`` is set, because the LRN epilogue needs every
-    channel of a pooled row in one cell (basic_simd is always full
-    width).
+    their fused kernel runs with.  With ``lrn`` set the oc width follows
+    ``kernels.resolve_lrn_ocb``: the historical full-width tile when the
+    full-width floor cell fits the budget, else the two-pass
+    channel-halo cell's ``ocb + lrn_n - 1`` widened tile (``lrn_n`` is
+    the LRN window; ``None`` keeps the conservative full-width charge —
+    basic_simd is always full width).
     """
     from repro.kernels.conv2d import kernels as K  # deferred: keeps the
     from repro.kernels.conv2d.ops import SUBLANES  # planner importable
@@ -137,13 +145,23 @@ def fused_working_set(conv: LayerSpec, pool: LayerSpec, method: Method,
     c = -(-cin // SUBLANES) * SUBLANES
     oc = conv.out_channels
     im2col = method in IM2COL_METHODS
-    ocb = oc if (lrn or not im2col) else min(_ADVANCED_OC_BLOCK[method], oc)
     _, ow = _conv_out_hw(0, w_in, conv)  # h unused for the width
     wp = w_in + 2 * conv.padding[1]
-    return K.fused_cell_bytes(
-        1, ow, wp, c, conv.kernel[0], conv.kernel[1], conv.stride[0], ocb,
-        (pool.kernel[0], pool.kernel[1], pool.stride[0], pool.stride[1]),
-        im2col=im2col)
+    pool_t = (pool.kernel[0], pool.kernel[1], pool.stride[0],
+              pool.stride[1])
+    kh, kw = conv.kernel
+    sy = conv.stride[0]
+    oc_halo = 0
+    if lrn and im2col and lrn_n is not None:
+        ocb, oc_halo = K.resolve_lrn_ocb(
+            oc, _ADVANCED_OC_BLOCK[method], (lrn_n, 1e-4, 0.75, 1.0),
+            None, ow, wp, c, kh, kw, sy, pool_t, im2col=im2col)
+    elif lrn or not im2col:
+        ocb = oc
+    else:
+        ocb = min(_ADVANCED_OC_BLOCK[method], oc)
+    return K.fused_cell_bytes(1, ow, wp, c, kh, kw, sy, ocb, pool_t,
+                              im2col=im2col, oc_halo=oc_halo)
 
 
 def layers_as_chain(convs) -> Tuple[Tuple, Tuple]:
@@ -160,13 +178,16 @@ def layers_as_chain(convs) -> Tuple[Tuple, Tuple]:
 
 
 def chain_working_set(convs, pool, method: Optional[Method],
-                      cin: int, h_in: int, w_in: int) -> int:
+                      cin: int, h_in: int, w_in: int,
+                      oc_block_final: Optional[int] = None) -> int:
     """Modelled VMEM bytes of the smallest possible chain grid cell (one
     final row — one pool window of final-conv rows when ``pool`` is set)
-    for this run of consecutive convs.  Chains run every stage at full
-    output-channel width, so unlike ``fused_working_set`` there is no oc
-    tile to charge — the dominant term is the resident weights of all
-    stages (``kernels.chain_cell_bytes``)."""
+    for this run of consecutive convs.  Chains run every *intermediate*
+    stage at full output-channel width (the next stage consumes every
+    channel), so the dominant term is the resident weights of all stages
+    (``kernels.chain_cell_bytes``); ``oc_block_final`` restores oc-grid
+    blocking on the final stage, shrinking its resident-weights and
+    output-band terms."""
     from repro.kernels.conv2d import kernels as K
     from repro.kernels.conv2d.ops import SUBLANES
 
@@ -177,7 +198,8 @@ def chain_working_set(convs, pool, method: Optional[Method],
                pool.stride[1]))
     im2col = method is None or method in IM2COL_METHODS
     return K.chain_cell_bytes(1, h_in, w_in, c, chain, ocs, pool_t,
-                              im2col=im2col)
+                              im2col=im2col,
+                              oc_block_final=oc_block_final)
 
 
 #: a fusion cost gate: ``gate(candidate_group, method, in_shape) -> bool``
@@ -319,6 +341,7 @@ def _try_group(layers, i, method_for, no_fuse, fuse_relu, cin, h_in, w_in,
     # binds on the XLA path too): the same fallback ladder, but a group
     # is declined when the cost model scores it slower than its
     # per-layer ladder, not only when it busts VMEM.
+    oc_block_final = None
     if vmem_check or cost_gate is not None:
         while True:
             if len(convs) == 1 and pool is None:
@@ -330,15 +353,21 @@ def _try_group(layers, i, method_for, no_fuse, fuse_relu, cin, h_in, w_in,
                     names=(tuple(n for stage in conv_names for n in stage)
                            + tuple(pool_names)
                            + ((lrn.name,) if lrn is not None else ())),
-                    lrn=lrn)
+                    lrn=lrn, oc_block_final=oc_block_final)
                 admitted = cost_gate(cand, method, (cin, h_in, w_in))
             else:
                 admitted = _fits_vmem(convs, pool, method, cin, h_in, w_in,
-                                      lrn is not None, vmem_budget)
+                                      lrn, vmem_budget, oc_block_final)
             if admitted:
                 break
             if lrn is not None:
                 lrn = None
+                continue
+            if len(convs) > 1 and oc_block_final is None:
+                # chain rung: block the final stage's oc grid (its
+                # channels feed no further stage) before shortening the
+                # chain — incompatible with LRN, which is gone by here
+                oc_block_final = _ADVANCED_OC_BLOCK.get(method, 8)
                 continue
             if len(convs) == 1:
                 return None  # single conv+pool whose floor cell busts
@@ -346,33 +375,38 @@ def _try_group(layers, i, method_for, no_fuse, fuse_relu, cin, h_in, w_in,
             relus.pop()
             conv_names.pop()
             pool, pool_relu, pool_names = None, False, []
+            oc_block_final = None
     if len(convs) == 1 and pool is None:
         return None  # a lone conv is not a super-layer
     names = (tuple(n for stage in conv_names for n in stage)
              + tuple(pool_names) + ((lrn.name,) if lrn is not None else ()))
     return FusedLayerSpec(convs=tuple(convs), relus=tuple(relus), pool=pool,
-                          pool_relu=pool_relu, names=names, lrn=lrn)
+                          pool_relu=pool_relu, names=names, lrn=lrn,
+                          oc_block_final=oc_block_final)
 
 
-def _fits_vmem(convs, pool, method, cin, h_in, w_in, with_lrn,
-               vmem_budget) -> bool:
+def _fits_vmem(convs, pool, method, cin, h_in, w_in, lrn,
+               vmem_budget, oc_block_final=None) -> bool:
     from repro.kernels.conv2d import kernels as K
 
     if len(convs) > 1:
-        # chain cells: full width at every stage, resident weights —
-        # checked against the near-full-VMEM chain budget (method=None
-        # charges im2col staging, the widest any fusable method stages)
+        # chain cells: full width at every intermediate stage, resident
+        # weights — checked against the near-full-VMEM chain budget
+        # (method=None charges im2col staging, the widest any fusable
+        # method stages); ``oc_block_final`` shrinks the final stage
         budget = (K.CHAIN_VMEM_BUDGET_BYTES if vmem_budget is None
                   else vmem_budget)
-        return chain_working_set(convs, pool, method, cin, h_in,
-                                 w_in) <= budget
+        return chain_working_set(convs, pool, method, cin, h_in, w_in,
+                                 oc_block_final=oc_block_final) <= budget
     budget = K.VMEM_BUDGET_BYTES if vmem_budget is None else vmem_budget
     # unknown method (method_for=None): charge the widest cell any
     # fusable method would stage — basic_simd's full-width oc terms and
     # the advanced kernels' im2col staging dominate different regimes
     methods = ((method,) if method is not None
                else (Method.BASIC_SIMD, Method.ADVANCED_SIMD_8))
-    return max(fused_working_set(convs[0], pool, m, cin, w_in, lrn=with_lrn)
+    lrn_n = None if lrn is None else lrn.lrn_n
+    return max(fused_working_set(convs[0], pool, m, cin, w_in,
+                                 lrn=lrn is not None, lrn_n=lrn_n)
                for m in methods) <= budget
 
 
@@ -386,7 +420,7 @@ def group_fits_vmem(group: FusedLayerSpec, method: Optional[Method],
     modelled latencies — same accounting, public entry point."""
     c, h, w = in_shape
     return _fits_vmem(list(group.convs), group.pool, method, c, h, w,
-                      group.lrn is not None, vmem_budget)
+                      group.lrn, vmem_budget, group.oc_block_final)
 
 
 def fusion_summary(plan: Iterable[PlanItem]) -> List[Tuple[str, ...]]:
@@ -396,7 +430,9 @@ def fusion_summary(plan: Iterable[PlanItem]) -> List[Tuple[str, ...]]:
 
 def group_band_params(group: FusedLayerSpec, method: Method,
                       in_shape: Tuple[int, int, int],
-                      oh_block: Optional[int]) -> dict:
+                      oh_block: Optional[int], *,
+                      pool_carry: Optional[bool] = None,
+                      lrn_oc_block: Optional[bool] = None) -> dict:
     """The FULL resolved band geometry + VMEM accounting of one fused
     group's Pallas cell, re-derived from the same kernel resolvers the
     dispatch path runs (``resolve_ph_block`` / ``resolve_chain_block`` /
@@ -412,6 +448,11 @@ def group_band_params(group: FusedLayerSpec, method: Method,
       the per-band input-row advance, and the stage-0 padded-coordinate
       offset of band 0 (≤ 0: the kernel pre-pads ``-in_base`` extra top
       zero rows),
+    * ``carry`` / ``steps``: input rows re-used from VMEM scratch each
+      band step (``K*sy`` for the sliding-window carry cell, 0
+      otherwise) and the physical grid steps along the band axis
+      (``n_tiles + 1`` for the carry cell's sacrificial seed step,
+      ``n_tiles`` otherwise),
     * ``stride_eff`` / ``window_eff``: the group collapsed to ONE
       effective conv — input rows advanced per final row, and input rows
       one final row reads (``band == (blk-1)*stride_eff + window_eff``),
@@ -438,35 +479,49 @@ def group_band_params(group: FusedLayerSpec, method: Method,
         oh, ow = _conv_out_hw(h, w, cv)
         wp = w + 2 * cv.padding[1]
         oc = cv.out_channels
-        if not im2col or group.lrn is not None:
-            ocb = oc  # basic_simd / LRN tail: full oc width
-        else:
-            ocb = min(_ADVANCED_OC_BLOCK[method], oc)
         kh, kw = cv.kernel
         sy = cv.stride[0]
+        lrn_t = None
+        if group.lrn is not None:
+            lg = group.lrn
+            lrn_t = (lg.lrn_n, lg.lrn_alpha, lg.lrn_beta, lg.lrn_k)
+        if not im2col:
+            ocb, oc_halo = oc, 0  # basic_simd: always full oc width
+        else:
+            ocb, oc_halo = K.resolve_lrn_ocb(
+                oc, _ADVANCED_OC_BLOCK[method], lrn_t, lrn_oc_block, ow,
+                wp, cp, kh, kw, sy, pool_t)
         pkh, _, psy, _ = pool_t
         ph = (oh - pkh) // psy + 1
         blk, n_tiles = K.resolve_ph_block(
             ph, oh, ow, wp, cp, kh, kw, sy, ocb, pool_t, oh_block,
-            im2col=im2col)
+            im2col=im2col, oc_halo=oc_halo)
+        carry_on = K.resolve_pool_carry(pool_carry, im2col, lrn_t, pool_t,
+                                        blk, n_tiles)
         stride_eff = psy * sy          # input rows per pooled row
         window_eff = (pkh - 1) * sy + kh
+        carry = (pkh - psy) * sy if carry_on else 0
         geo = {
             "kind": "fused", "blk": blk, "n_tiles": n_tiles, "total": ph,
-            "band": (blk - 1) * stride_eff + window_eff,
+            "band": (blk - 1) * stride_eff + window_eff - carry,
             "row_step": blk * stride_eff, "in_base": 0,
+            "carry": carry, "steps": n_tiles + (1 if carry_on else 0),
             "stride_eff": stride_eff, "window_eff": window_eff,
             "padded_h": h + 2 * cv.padding[0],
             "cell_bytes": K.fused_cell_bytes(blk, ow, wp, cp, kh, kw, sy,
-                                             ocb, pool_t, im2col=im2col),
+                                             ocb, pool_t, im2col=im2col,
+                                             oc_halo=oc_halo),
             "floor_bytes": K.fused_cell_bytes(1, ow, wp, cp, kh, kw, sy,
-                                              ocb, pool_t, im2col=im2col),
+                                              ocb, pool_t, im2col=im2col,
+                                              oc_halo=oc_halo),
             "budget": K.VMEM_BUDGET_BYTES,
         }
     else:
         chain, ocs = layers_as_chain(group.convs)
+        obf = group.oc_block_final
         blk, n_tiles = K.resolve_chain_block(h, w, cp, chain, ocs, pool_t,
-                                             oh_block, im2col=im2col)
+                                             oh_block, im2col=im2col,
+                                             oc_block_final=obf)
         _, _, band, in_step, in_base = K.chain_band_geometry(blk, chain,
                                                              pool_t)
         hh, ww = h, w
@@ -480,13 +535,16 @@ def group_band_params(group: FusedLayerSpec, method: Method,
         geo = {
             "kind": "chain", "blk": blk, "n_tiles": n_tiles, "total": total,
             "band": band, "row_step": in_step, "in_base": in_base,
+            "carry": 0, "steps": n_tiles,
             "stride_eff": stride_eff,
             "window_eff": band - (blk - 1) * stride_eff,
             "padded_h": h + 2 * chain[0][4],
             "cell_bytes": K.chain_cell_bytes(blk, h, w, cp, chain, ocs,
-                                             pool_t, im2col=im2col),
+                                             pool_t, im2col=im2col,
+                                             oc_block_final=obf),
             "floor_bytes": K.chain_cell_bytes(1, h, w, cp, chain, ocs,
-                                              pool_t, im2col=im2col),
+                                              pool_t, im2col=im2col,
+                                              oc_block_final=obf),
             "budget": K.CHAIN_VMEM_BUDGET_BYTES,
         }
     for cv in group.convs:
@@ -499,7 +557,9 @@ def group_band_params(group: FusedLayerSpec, method: Method,
 
 def group_geometry(group: FusedLayerSpec, method: Method,
                    in_shape: Tuple[int, int, int],
-                   oh_block: Optional[int]) -> dict:
+                   oh_block: Optional[int], *,
+                   pool_carry: Optional[bool] = None,
+                   lrn_oc_block: Optional[bool] = None) -> dict:
     """The executed geometry of one fused group: the final-row band the
     Pallas cell resolves (``rows_per_cell`` pooled/final rows per grid
     cell × ``n_tiles`` bands per frame) plus the group's output spatial
@@ -508,7 +568,9 @@ def group_geometry(group: FusedLayerSpec, method: Method,
     one un-banded pass).  ``in_shape`` is the ``(C, H, W)`` activation
     entering the group — the plan IR carries it pre-resolved on each
     fused step."""
-    geo = group_band_params(group, method, in_shape, oh_block)
+    geo = group_band_params(group, method, in_shape, oh_block,
+                            pool_carry=pool_carry,
+                            lrn_oc_block=lrn_oc_block)
     return {"group": group.name, "convs": len(group.convs),
             "rows_per_cell": geo["blk"], "n_tiles": geo["n_tiles"],
             "out_hw": geo["out_hw"]}

@@ -267,7 +267,8 @@ def conv2d_pool_fused(x, w, b, method: "Method", stride=(1, 1),
                       pool_stride=(2, 2), pool_kind: str = "max",
                       pool_relu: bool = False, use_pallas=False,
                       oh_block=None, lrn_n=None, lrn_alpha: float = 1e-4,
-                      lrn_beta: float = 0.75, lrn_k: float = 1.0):
+                      lrn_beta: float = 0.75, lrn_k: float = 1.0,
+                      pool_carry: bool = None, lrn_oc_block: bool = None):
     """One-dispatch conv→[ReLU]→pool→[ReLU]→[LRN] (a ``FusedLayerSpec``).
 
     SIMD methods only — the planner falls back to the per-layer ladder for
@@ -290,7 +291,8 @@ def conv2d_pool_fused(x, w, b, method: "Method", stride=(1, 1),
                                pool_stride=pool_stride, pool_kind=pool_kind,
                                pool_relu=pool_relu, lrn_n=lrn_n,
                                lrn_alpha=lrn_alpha, lrn_beta=lrn_beta,
-                               lrn_k=lrn_k)
+                               lrn_k=lrn_k, pool_carry=pool_carry,
+                               lrn_oc_block=lrn_oc_block)
     xh = nchw_to_nhwc(x)  # one layout round-trip for the whole group
     wh = oihw_to_hwio(w)
     n, h, wd, c = xh.shape
@@ -344,7 +346,7 @@ def conv2d_chain_fused(x, ws, bs, method: "Method", strides, paddings,
                        pool_kind: str = "max", pool_relu: bool = False,
                        use_pallas=False, oh_block=None, lrn_n=None,
                        lrn_alpha: float = 1e-4, lrn_beta: float = 0.75,
-                       lrn_k: float = 1.0):
+                       lrn_k: float = 1.0, oc_block_final: int = None):
     """One-dispatch conv→[ReLU]→conv→…→[pool]→[ReLU]→[LRN] (a chain
     ``FusedLayerSpec``).
 
@@ -369,7 +371,8 @@ def conv2d_chain_fused(x, ws, bs, method: "Method", strides, paddings,
             tuple(relus), method=pallas_method, oh_block=oh_block,
             pool_kernel=pool_kernel, pool_stride=pool_stride,
             pool_kind=pool_kind, pool_relu=pool_relu, lrn_n=lrn_n,
-            lrn_alpha=lrn_alpha, lrn_beta=lrn_beta, lrn_k=lrn_k)
+            lrn_alpha=lrn_alpha, lrn_beta=lrn_beta, lrn_k=lrn_k,
+            oc_block_final=oc_block_final)
     xh = nchw_to_nhwc(x).astype(jnp.float32)  # one swap for the whole chain
     for w, b, stride, padding, relu in zip(ws, bs, strides, paddings, relus):
         wh = oihw_to_hwio(w)

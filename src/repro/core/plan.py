@@ -105,9 +105,14 @@ def knob_space(net: NetworkDef, *,
     Shapes are propagated through the net so each conv's ``oh_blocks``
     list is clipped to bands strictly smaller than its output height
     (``None`` — the resolver's VMEM-model auto sizing — always leads).
-    Pool and LRN layers expose only the ``fuse`` axis (their method/band
-    geometry is owned by the group they fuse into); fc and the other
-    pointwise tail layers expose no tunable axis today.
+    Conv layers also expose the second-generation fused-cell axes:
+    ``pool_carry`` (sliding-window pool accumulator; None = auto) and
+    ``lrn_oc_block`` (two-pass channel-halo LRN blocking; None = auto)
+    bind when the conv leads a fused conv+pool group, ``oc_block_final``
+    binds when the conv ENDS a fused chain (final-stage oc-grid
+    blocking).  Pool and LRN layers expose only the ``fuse`` axis (their
+    method/band geometry is owned by the group they fuse into); fc and
+    the other pointwise tail layers expose no tunable axis today.
     """
     space: Dict[str, Dict[str, list]] = {}
     c, h, w = net.input_shape
@@ -118,6 +123,9 @@ def knob_space(net: NetworkDef, *,
                 "methods": list(methods),
                 "oh_blocks": [None] + [b for b in oh_blocks if b < oh],
                 "fuse": [True, False],
+                "pool_carry": [None, False],
+                "lrn_oc_block": [None, True, False],
+                "oc_block_final": [None, 4, 8],
             }
             c, h, w = spec.out_channels, oh, ow
         elif spec.kind == "pool":
@@ -304,7 +312,10 @@ class ExecutionPlan:
         """Executed geometry of every fused group, read straight off the
         plan steps (each already carries its resolved input shape, method
         and band override) — see ``fusion.group_geometry``."""
-        return [group_geometry(s.group, s.method, s.in_shape, s.oh_block)
+        return [group_geometry(
+                    s.group, s.method, s.in_shape, s.oh_block,
+                    pool_carry=(s.kwargs or {}).get("pool_carry"),
+                    lrn_oc_block=(s.kwargs or {}).get("lrn_oc_block"))
                 for s in self.steps if s.kind in ("fused", "chain")]
 
     def cost(self, model=None, batch: int = 1):
@@ -326,6 +337,9 @@ def compile_plan(net: NetworkDef, *,
                  fuse: bool = True,
                  fuse_relu: bool = True,
                  per_layer_fuse: Optional[Mapping[str, bool]] = None,
+                 per_layer_pool_carry: Optional[Mapping[str, bool]] = None,
+                 per_layer_lrn_oc_block: Optional[Mapping[str, bool]] = None,
+                 per_layer_oc_block_final: Optional[Mapping[str, int]] = None,
                  use_pallas: bool = False,
                  vmem_budget: Optional[int] = None,
                  cost_gate: Optional[CostGate] = None,
@@ -344,6 +358,14 @@ def compile_plan(net: NetworkDef, *,
     (``repro.core.cost.fusion_cost_gate``) — a group fuses only when the
     model scores the single dispatch faster than its per-layer ladder.
 
+    ``per_layer_pool_carry`` / ``per_layer_lrn_oc_block`` (keyed by the
+    conv LEADING a fused conv+pool group) pin that group's
+    sliding-window carry / channel-halo LRN blocking (None = the kernel
+    resolvers' auto rule); ``per_layer_oc_block_final`` (keyed by the
+    conv ENDING a fused chain) forces the chain's final-stage oc block
+    (ignored when the chain keeps an LRN tail — the kernel rejects the
+    combination).
+
     ``verify=True`` (the default) runs the static plan verifier
     (``repro.analysis.verifier.verify_plan``) over the compiled plan and
     raises ``PlanVerificationError`` on any error-severity finding —
@@ -352,6 +374,9 @@ def compile_plan(net: NetworkDef, *,
     """
     per_layer_methods = per_layer_methods or {}
     per_layer_oh_blocks = per_layer_oh_blocks or {}
+    per_layer_pool_carry = per_layer_pool_carry or {}
+    per_layer_lrn_oc_block = per_layer_lrn_oc_block or {}
+    per_layer_oc_block_final = per_layer_oc_block_final or {}
 
     def method_for(name: str) -> Method:
         return per_layer_methods.get(name, method)
@@ -369,6 +394,7 @@ def compile_plan(net: NetworkDef, *,
         items = list(net.layers)
 
     steps: List[PlanStep] = []
+    final_items: List[PlanItem] = []
     c, h, w = net.input_shape
     cur: Shape = (c, h, w)
     flat: Optional[int] = None
@@ -382,6 +408,19 @@ def compile_plan(net: NetworkDef, *,
             if it.pool is not None:
                 h, w = _pool_out_hw(h, w, it.pool)
             cur = (c, h, w)
+            kw = _lrn_kwargs(it.lrn)
+            if len(it.convs) > 1:
+                # explicit final-stage oc block (keyed by the LAST conv —
+                # the chain cell's band lives in final-stage rows too)
+                # overrides the planner's admission-ladder choice; an LRN
+                # tail keeps full width (the kernel rejects the combo)
+                obf = per_layer_oc_block_final.get(it.convs[-1].name)
+                if obf is not None and it.lrn is None:
+                    it = replace(it, oc_block_final=obf)
+                kw["oc_block_final"] = it.oc_block_final
+            else:
+                kw["pool_carry"] = per_layer_pool_carry.get(it.conv.name)
+                kw["lrn_oc_block"] = per_layer_lrn_oc_block.get(it.conv.name)
             # a chain cell's band is defined in FINAL-stage rows, so the
             # last conv's oh_block override is the one that maps onto it
             steps.append(PlanStep(
@@ -389,9 +428,11 @@ def compile_plan(net: NetworkDef, *,
                 names=it.names, in_shape=in_shape, out_shape=cur, group=it,
                 method=method_for(it.conv.name),
                 oh_block=ohb_for(it.convs[-1].name),
-                kwargs=_lrn_kwargs(it.lrn)))
+                kwargs=kw))
+            final_items.append(it)
             continue
         spec = it
+        final_items.append(spec)
         in_shape = cur
         if spec.kind == "conv":
             c, h, w = cur
@@ -442,7 +483,7 @@ def compile_plan(net: NetworkDef, *,
         else:
             raise ValueError(spec.kind)
     plan = ExecutionPlan(net=net, fuse=fuse, use_pallas=use_pallas,
-                         steps=tuple(steps), items=tuple(items),
+                         steps=tuple(steps), items=tuple(final_items),
                          vmem_budget=vmem_budget)
     if verify:
         # deferred import: analysis imports this module at its top level

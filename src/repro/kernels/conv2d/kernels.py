@@ -51,7 +51,19 @@ padding as ``engine._lrn`` — window ``[c - n//2, c + (n-1)//2]``, so even
 is written.  AlexNet's two ``conv→relu→pool→norm`` runs become single
 dispatches.  LRN needs every output channel of a pooled row in one cell,
 so the advanced kernel drops its oc-grid blocking to one full-width tile
-when ``lrn`` is set (the working-set model below charges for it).
+when ``lrn`` is set (the working-set model below charges for it) —
+unless the *two-pass channel-halo* cell applies: ``resolve_lrn_ocb``
+restores oc blocking by widening each weight tile with the LRN window's
+``n - 1`` neighbour columns (zero columns past the frame edges), so a
+tile computes the conv channels its own LRN windows read and
+``lrn_band_halo`` keeps the ``ocb`` core at the store.
+
+Sliding-window pool accumulator (``resolve_pool_carry``): when adjacent
+pooled bands overlap (``K = pkh - psy >= 1`` conv rows), the carry cell
+convolves only the ``R = ph_block*psy`` fresh rows per band step and
+keeps the K boundary rows in VMEM scratch across the sequential band
+axis — one extra seed step (its output block is sliced off) trades the
+per-band halo re-read and re-convolution for a K-row scratch carry.
 
 ``fused_cell_bytes`` is the shared VMEM working-set model for one fused
 grid cell (halo-widened input band + patch staging + weights + conv band
@@ -199,7 +211,8 @@ def resolve_oh_block(oh, ow, wp, c, kh, kw, sy, oc_block, oh_block,
 
 
 def fused_cell_bytes(phb, ow, wp, c, kh, kw, sy, oc_block, pool,
-                     im2col: bool = True, itemsize: int = 4) -> int:
+                     im2col: bool = True, itemsize: int = 4,
+                     oc_halo: int = 0) -> int:
     """Modelled VMEM working set of ONE fused conv→pool(→LRN) grid cell.
 
     ``phb`` pooled rows ⇒ ``(phb-1)*psy + pkh`` conv rows ⇒
@@ -207,26 +220,30 @@ def fused_cell_bytes(phb, ow, wp, c, kh, kw, sy, oc_block, pool,
     fp32 staging: the halo-widened input band, the patch staging (full
     im2col matrix for the advanced kernel, one [rows, C] slice for the
     basic kernel), one weight block, the conv-band accumulator, and the
-    pooled output band.  The same model backs both the kernel-side
-    ``auto_ph_block`` walk and the planner's decline-to-fuse check, so
-    the planner never forms a group the kernel cannot stage.
+    pooled output band.  ``oc_halo`` widens every oc-tile term by the
+    LRN window's ``n - 1`` neighbour columns for the two-pass
+    channel-halo cell (0 for the classic cells).  The same model backs
+    both the kernel-side ``auto_ph_block`` walk and the planner's
+    decline-to-fuse check, so the planner never forms a group the kernel
+    cannot stage.
     """
     pkh, pkw, psy, psx = pool
     pw = (ow - pkw) // psx + 1
     cband = (phb - 1) * psy + pkh          # conv rows per cell
     band = (cband - 1) * sy + kh           # input rows per cell (halo incl.)
     patch_c = kh * kw * c if im2col else c
+    ocw = oc_block + oc_halo               # halo-widened oc tile
     return (band * wp * c                  # halo-widened input band
             + cband * ow * patch_c        # patch staging
-            + kh * kw * c * oc_block      # weight block
-            + cband * ow * oc_block       # conv band accumulator
-            + phb * pw * oc_block         # pooled (normalized) output band
+            + kh * kw * c * ocw           # weight block
+            + cband * ow * ocw            # conv band accumulator
+            + phb * pw * ocw              # pooled (normalized) output band
             ) * itemsize
 
 
 def auto_ph_block(ph, ow, wp, c, kh, kw, sy, oc_block, pool,
                   budget: int = VMEM_BUDGET_BYTES,
-                  im2col: bool = True) -> int:
+                  im2col: bool = True, oc_halo: int = 0) -> int:
     """Largest pooled-row band whose fused-cell working set fits
     ``budget``; floors at one pooled row (one pool window of conv rows —
     which may exceed the soft budget: the planner's job is to keep such
@@ -235,7 +252,7 @@ def auto_ph_block(ph, ow, wp, c, kh, kw, sy, oc_block, pool,
                          if b < ph]
     for phb in candidates:
         if fused_cell_bytes(phb, ow, wp, c, kh, kw, sy, oc_block, pool,
-                            im2col=im2col) <= budget:
+                            im2col=im2col, oc_halo=oc_halo) <= budget:
             return phb
     return 1
 
@@ -252,7 +269,7 @@ def _equalize_bands(blk, target):
 
 
 def resolve_ph_block(ph, oh, ow, wp, c, kh, kw, sy, oc_block, pool, oh_block,
-                     im2col: bool = True) -> tuple:
+                     im2col: bool = True, oc_halo: int = 0) -> tuple:
     """The equalized pooled-row band a fused conv+pool cell will execute
     with, as ``(ph_block, n_tiles)``: the ``auto_ph_block`` walk when
     ``oh_block`` is None, else the explicit conv band snapped down to
@@ -261,7 +278,7 @@ def resolve_ph_block(ph, oh, ow, wp, c, kh, kw, sy, oc_block, pool, oh_block,
     pkh, _, psy, _ = pool
     if oh_block is None:
         phb = auto_ph_block(ph, ow, wp, c, kh, kw, sy, oc_block, pool,
-                            im2col=im2col)
+                            im2col=im2col, oc_halo=oc_halo)
     else:
         # snap the explicit conv band to the pool stride: the largest
         # pooled-row count whose conv band fits inside the oh-band
@@ -286,6 +303,69 @@ def lrn_band(x, n, alpha, beta, k):
     for i in range(n):
         acc = acc + jax.lax.slice_in_dim(sq_p, i, i + c, axis=x.ndim - 1)
     return x / (k + alpha * acc) ** beta
+
+
+def lrn_band_halo(x, n, alpha, beta, k):
+    """LRN over a channel-halo-widened band (the two-pass oc-blocked
+    cell): ``x``'s minor axis holds ``ocb + n - 1`` conv channels — the
+    tile's own ``ocb`` plus the ``n//2`` / ``n-1-n//2`` neighbour columns
+    the window reaches into.  Zero weight columns at the frame edges make
+    the halo channels exact zeros there, reproducing ``lrn_band``'s
+    zero-padded window without any in-kernel padding.  Returns the
+    normalized ``ocb``-wide core.
+    """
+    lo = n // 2
+    ocb = x.shape[-1] - (n - 1)
+    sq = x * x
+    acc = jax.lax.slice_in_dim(sq, 0, ocb, axis=x.ndim - 1)
+    for i in range(1, n):
+        acc = acc + jax.lax.slice_in_dim(sq, i, i + ocb, axis=x.ndim - 1)
+    core = jax.lax.slice_in_dim(x, lo, lo + ocb, axis=x.ndim - 1)
+    return core / (k + alpha * acc) ** beta
+
+
+def resolve_lrn_ocb(oc, oc_block, lrn, lrn_oc_block, ow, wp, c, kh, kw, sy,
+                    pool, im2col: bool = True) -> tuple:
+    """Resolve ``(ocb, oc_halo)`` for a fused conv→pool→LRN cell.
+
+    The classic cell runs LRN at one full-width oc tile (the window reads
+    every channel of a pooled row).  The two-pass channel-halo cell
+    restores oc blocking by widening each weight tile with the window's
+    ``n - 1`` neighbour columns so a tile can normalize its own ``ocb``
+    channels locally.  Auto (``lrn_oc_block=None``) keeps the historical
+    full-width tile whenever even the one-pooled-row floor cell fits the
+    budget — default plans stay byte-identical — and blocks otherwise;
+    ``True`` forces blocking, ``False`` forces full width.  Shared by the
+    kernel dispatch, the fusion planner, and the verifier; the sanitizer
+    re-derives it independently (Phase A).
+    """
+    if lrn is None or not im2col:
+        return (min(oc_block, oc) if im2col else oc), 0
+    blocked = min(oc_block, oc)
+    if blocked >= oc or lrn_oc_block is False:
+        return oc, 0
+    if lrn_oc_block is None and fused_cell_bytes(
+            1, ow, wp, c, kh, kw, sy, oc, pool) <= VMEM_BUDGET_BYTES:
+        return oc, 0
+    return blocked, lrn[0] - 1
+
+
+def resolve_pool_carry(pool_carry, im2col, lrn, pool, phb, n_tiles) -> bool:
+    """Whether a fused conv→pool dispatch runs the sliding-window carry
+    cell: adjacent oh-bands share ``K = pkh - psy`` boundary conv rows,
+    and the carry cell keeps them in VMEM scratch between band steps
+    instead of re-convolving them.  Requires the im2col kernel, no LRN
+    epilogue, overlapping pool windows (``K >= 1``) that fit inside one
+    band's fresh rows (``K <= phb*psy``), and more than one band.
+    ``pool_carry``: None = auto (on when feasible), False = off, True =
+    requested (still falls back to off when infeasible).  Shared by the
+    kernel dispatch, the fusion planner, and the verifier; the sanitizer
+    re-derives it independently (Phase A)."""
+    if pool is None or lrn is not None or not im2col or pool_carry is False:
+        return False
+    pkh, _, psy, _ = pool
+    k_rows = pkh - psy
+    return 1 <= k_rows <= phb * psy and n_tiles > 1
 
 
 # ---------------------------------------------------------------------------
@@ -377,7 +457,7 @@ def _plan_oh_tiles(xp, oh, kh, kw, sy, oh_block, ow, oc_block,
 
 
 def _plan_pool_tiles(xp, oh, ow, kh, kw, sy, oh_block, oc_block, pool,
-                     im2col=True):
+                     im2col=True, oc_halo=0):
     """Band geometry for a fused conv+pool cell.
 
     Resolves the pooled-row band directly from the fused-cell working-set
@@ -406,7 +486,8 @@ def _plan_pool_tiles(xp, oh, ow, kh, kw, sy, oh_block, oc_block, pool,
         raise ValueError(
             f"pool window ({pkh},{pkw}) larger than conv output ({oh},{ow})")
     phb, n_tiles = resolve_ph_block(ph, oh, ow, wp, c, kh, kw, sy, oc_block,
-                                    pool, oh_block, im2col=im2col)
+                                    pool, oh_block, im2col=im2col,
+                                    oc_halo=oc_halo)
     cband = (phb - 1) * psy + pkh           # conv rows per cell
     band = (cband - 1) * sy + kh            # input rows per cell (halo incl.)
     row_step = phb * psy * sy
@@ -441,6 +522,29 @@ def _pool_epilogue(acc, o_ref, pool, conv_relu, lrn=None):
         n, alpha, beta, k = lrn
         out = lrn_band(out, n, alpha, beta, k)
     o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _pool_epilogue_halo(acc, o_ref, pool, conv_relu, lrn):
+    """Channel-halo variant of ``_pool_epilogue`` for the oc-blocked LRN
+    cell: ``acc`` holds ``ocb + n - 1`` conv channels (the tile's own
+    plus the window's neighbour columns), the pooled band stays widened,
+    and ``lrn_band_halo`` narrows it to the ``ocb`` core at the single
+    HBM store.
+    """
+    from repro.kernels.pool2d.kernels import pool_band  # deferred: no cycle
+
+    pkh, pkw, psy, psx, kind, pool_relu, conv_ow = pool
+    phh, pww, ocb = o_ref.shape
+    n, alpha, beta, k = lrn
+    ocw = ocb + n - 1
+    if conv_relu:
+        acc = jnp.maximum(acc, 0.0)
+    cband = (phh - 1) * psy + pkh
+    wide = pool_band(acc.reshape(cband, conv_ow, ocw), phh, pww,
+                     pkh, pkw, psy, psx, kind)
+    if pool_relu:
+        wide = jnp.maximum(wide, 0.0)
+    o_ref[...] = lrn_band_halo(wide, n, alpha, beta, k).astype(o_ref.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -574,11 +678,74 @@ def _advanced_simd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
     o_ref[...] = acc.reshape(ohh, oww, ocb).astype(o_ref.dtype)
 
 
+def _advanced_simd_halo_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sy, sx,
+                               relu, pool, lrn):
+    # two-pass channel-halo cell: w_ref/b_ref are widened to the tile's
+    # ocb + n - 1 columns (its own channels plus the LRN window's
+    # neighbours), so conv+pool run over the widened tile and
+    # lrn_band_halo keeps only the ocb core at the store — oc blocking
+    # and the LRN epilogue coexist.
+    pkh, _, psy, _, _, _, conv_ow = pool
+    phh = o_ref.shape[0]
+    ohh, oww = (phh - 1) * psy + pkh, conv_ow  # conv rows this cell owns
+    xin = x_ref[0]
+    parts = []
+    for i in range(kh):
+        for j in range(kw):
+            parts.append(jax.lax.slice(
+                xin, (i, j, 0),
+                (i + (ohh - 1) * sy + 1, j + (oww - 1) * sx + 1,
+                 xin.shape[2]),
+                (sy, sx, 1),
+            ).reshape(ohh * oww, -1))
+    pmat = jnp.concatenate(parts, axis=-1)  # [rows, KH*KW*C]
+    acc = jnp.dot(pmat.astype(ACC_DTYPE), w_ref[...].astype(ACC_DTYPE),
+                  preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(ACC_DTYPE)
+    _pool_epilogue_halo(acc, o_ref, pool, relu, lrn)
+
+
+def _advanced_simd_carry_kernel(x_ref, w_ref, b_ref, o_ref, c_ref, *, kh, kw,
+                                sy, sx, relu, pool, k_rows):
+    # sliding-window pool accumulator: each band step convolves only its
+    # R = PH_BLK*psy fresh conv rows; the K = pkh - psy boundary rows are
+    # carried in VMEM scratch (c_ref) from the previous step instead of
+    # being re-read and re-convolved from the input band.  Step 0 is a
+    # pure seed band over the zero prepad (its output block is sliced off
+    # host-side); its last K fresh rows are conv rows [0, K).
+    pkh, _, psy, _, _, _, conv_ow = pool
+    phh, _, ocb = o_ref.shape
+    r_rows = phh * psy  # fresh conv rows this step owns
+    xin = x_ref[0]
+    parts = []
+    for i in range(kh):
+        for j in range(kw):
+            parts.append(jax.lax.slice(
+                xin, (i, j, 0),
+                (i + (r_rows - 1) * sy + 1, j + (conv_ow - 1) * sx + 1,
+                 xin.shape[2]),
+                (sy, sx, 1),
+            ).reshape(r_rows * conv_ow, -1))
+    pmat = jnp.concatenate(parts, axis=-1)  # [rows, KH*KW*C]
+    acc = jnp.dot(pmat.astype(ACC_DTYPE), w_ref[...].astype(ACC_DTYPE),
+                  preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(ACC_DTYPE)
+    fresh = acc.reshape(r_rows, conv_ow, ocb)
+    whole = jnp.concatenate([c_ref[...], fresh], axis=0)
+    _pool_epilogue(whole.reshape((k_rows + r_rows) * conv_ow, ocb), o_ref,
+                   pool, relu)
+    # slide the window: the LAST K fresh conv rows become the next band's
+    # carried head (pre-ReLU fp32 — the epilogue re-applies ReLU on read,
+    # so every pooled output still sees relu(conv) exactly once)
+    c_ref[...] = jax.lax.slice_in_dim(fresh, r_rows - k_rows, r_rows, axis=0)
+
+
 def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
                          relu=False, oc_block: int = 128, oh_block=None,
                          interpret: bool = False, pool_kernel=None,
                          pool_stride=None, pool_kind: str = "max",
-                         pool_relu: bool = False, lrn=None):
+                         pool_relu: bool = False, lrn=None, pool_carry=None,
+                         lrn_oc_block=None):
     n, h, wd, c = x_nhwc.shape
     kh, kw, _, oc = w_hwio.shape
     sy, sx = stride
@@ -587,32 +754,123 @@ def conv2d_advanced_simd(x_nhwc, w_hwio, b, stride=(1, 1), padding=(0, 0),
     oh, ow = _out_size(h, kh, sy, py), _out_size(wd, kw, sx, px)
     if lrn is not None and pool_kernel is None:
         raise ValueError("fused LRN epilogue requires a fused pool epilogue")
+    if pool_kernel is not None:
+        pkh, pkw = pool_kernel
+        psy, psx = pool_stride if pool_stride is not None else pool_kernel
     # LRN reaches across ALL output channels of a pooled row, so the oc
     # grid collapses to one full-width tile when the epilogue is fused
-    # (the planner's working-set check charges the full-width weights)
-    ocb = oc if lrn is not None else min(oc_block, oc)
+    # (the planner's working-set check charges the full-width weights) —
+    # unless the two-pass channel-halo cell restores the blocking with
+    # window-widened weight tiles (resolve_lrn_ocb decides; oc_halo > 0
+    # selects the halo dispatch below)
+    if lrn is not None:
+        ocb, oc_halo = resolve_lrn_ocb(oc, oc_block, lrn, lrn_oc_block, ow,
+                                       xp.shape[2], c, kh, kw, sy,
+                                       (pkh, pkw, psy, psx))
+    else:
+        ocb, oc_halo = min(oc_block, oc), 0
     pad_oc = (-oc) % ocb
     wmat = w_hwio.reshape(kh * kw * c, oc)
     if pad_oc:
         wmat = jnp.pad(wmat, ((0, 0), (0, pad_oc)))
         b = jnp.pad(b, (0, pad_oc))
     ocp = oc + pad_oc
+    if oc_halo:
+        # widen the weight/bias columns by the LRN window reach; the halo
+        # columns outside [0, ocp) are zero, so halo conv channels are
+        # exact zeros at the frame edges (lrn_band's zero-pad semantics)
+        halo_lo = lrn[0] // 2
+        halo_hi = lrn[0] - 1 - halo_lo
+        wmat = jnp.pad(wmat, ((0, 0), (halo_lo, halo_hi)))
+        b = jnp.pad(b, (halo_lo, halo_hi))
     if pool_kernel is not None:
         # fused super-layer: each cell writes a pooled band, the conv
         # activation stays in VMEM
-        pkh, pkw = pool_kernel
-        psy, psx = pool_stride if pool_stride is not None else pool_kernel
         xp, phb, n_tiles, band, _, ph, pw, row_step = _plan_pool_tiles(
-            xp, oh, ow, kh, kw, sy, oh_block, ocb, (pkh, pkw, psy, psx))
+            xp, oh, ow, kh, kw, sy, oh_block, ocb, (pkh, pkw, psy, psx),
+            oc_halo=oc_halo)
         pool = (pkh, pkw, psy, psx, pool_kind, pool_relu, ow)
         out_rows, out_cols = phb, pw
+        carry = resolve_pool_carry(pool_carry, True, lrn,
+                                   (pkh, pkw, psy, psx), phb, n_tiles)
     else:
         xp, ohb, n_tiles, band = _plan_oh_tiles(xp, oh, kh, kw, sy, oh_block,
                                                 ow, ocb)
         pool = None
         row_step = ohb * sy
         out_rows, out_cols = ohb, ow
+        carry = False
     wp = xp.shape[2]
+    if carry:
+        k_rows = pkh - psy        # conv rows carried between band steps
+        r_rows = phb * psy        # fresh conv rows per band step
+        band = (r_rows - 1) * sy + kh
+        row_step = r_rows * sy
+        prepad = row_step - k_rows * sy
+        # the zero prepad makes step 0 a pure seed band: its output block
+        # pools prepad zeros (sliced off below) while its last K fresh
+        # conv rows are conv rows [0, K) — step 1's carry.  The bottom
+        # rows _plan_pool_tiles already padded are exactly what the
+        # shifted bands need (the prepad algebra cancels to zero extra).
+        xp = jnp.pad(xp, ((0, 0), (prepad, 0), (0, 0), (0, 0)))
+        oc_tiles = ocp // ocb
+        kern = functools.partial(_advanced_simd_carry_kernel, kh=kh, kw=kw,
+                                 sy=sy, sx=sx, relu=relu, pool=pool,
+                                 k_rows=k_rows)
+        out = pl.pallas_call(
+            kern,
+            grid=(n, oc_tiles, n_tiles + 1),
+            in_specs=[
+                # element-offset indexing; the carried rows replace the
+                # pool-window share of the inter-band halo
+                pl.BlockSpec((1, band, wp, c),
+                             lambda i, u, j: (i, j * row_step, 0, 0),
+                             indexing_mode=pl.Unblocked()),
+                pl.BlockSpec((kh * kw * c, ocb), lambda i, u, j: (0, u)),
+                pl.BlockSpec((ocb,), lambda i, u, j: (u,)),
+            ],
+            out_specs=pl.BlockSpec((None, out_rows, out_cols, ocb),
+                                   lambda i, u, j: (i, j, 0, u)),
+            out_shape=jax.ShapeDtypeStruct(
+                (n, (n_tiles + 1) * out_rows, out_cols, ocp), x_nhwc.dtype),
+            scratch_shapes=[pltpu.VMEM((k_rows, ow, ocb), jnp.float32)],
+            compiler_params=pltpu.TPUCompilerParams(
+                # the band axis is sequential: each step consumes the
+                # carry its predecessor left in scratch
+                dimension_semantics=("parallel", "parallel", "arbitrary")
+            ),
+            interpret=interpret,
+        )(xp, wmat, b)
+        return out[:, out_rows:out_rows + ph, :, :oc]
+    if oc_halo:
+        oc_tiles = ocp // ocb
+        kern = functools.partial(_advanced_simd_halo_kernel, kh=kh, kw=kw,
+                                 sy=sy, sx=sx, relu=relu, pool=pool, lrn=lrn)
+        out = pl.pallas_call(
+            kern,
+            grid=(n, n_tiles, oc_tiles),
+            in_specs=[
+                # element-offset indexing on rows AND weight columns:
+                # adjacent weight tiles overlap by the n-1 halo columns
+                pl.BlockSpec((1, band, wp, c),
+                             lambda i, t, u: (i, t * row_step, 0, 0),
+                             indexing_mode=pl.Unblocked()),
+                pl.BlockSpec((kh * kw * c, ocb + oc_halo),
+                             lambda i, t, u: (0, u * ocb),
+                             indexing_mode=pl.Unblocked()),
+                pl.BlockSpec((ocb + oc_halo,), lambda i, t, u: (u * ocb,),
+                             indexing_mode=pl.Unblocked()),
+            ],
+            out_specs=pl.BlockSpec((None, out_rows, out_cols, ocb),
+                                   lambda i, t, u: (i, t, 0, u)),
+            out_shape=jax.ShapeDtypeStruct(
+                (n, n_tiles * out_rows, out_cols, ocp), x_nhwc.dtype),
+            compiler_params=pltpu.TPUCompilerParams(
+                dimension_semantics=("parallel", "parallel", "parallel")
+            ),
+            interpret=interpret,
+        )(xp, wmat, b)
+        return out[:, :ph, :, :oc]
     kern = functools.partial(_advanced_simd_kernel, kh=kh, kw=kw, sy=sy,
                              sx=sx, relu=relu, pool=pool, lrn=lrn)
     out = pl.pallas_call(
@@ -713,27 +971,35 @@ def chain_tile_intervals(blk, n_tiles, target, chain, pool):
 
 
 def chain_cell_bytes(blk, h, w, c, chain, ocs, pool,
-                     im2col: bool = True, itemsize: int = 4) -> int:
+                     im2col: bool = True, itemsize: int = 4,
+                     oc_block_final=None) -> int:
     """Modelled VMEM live set of ONE chain grid cell producing ``blk``
     final rows (pooled rows when ``pool`` is set).
 
-    Chains hold every stage's full-width weights resident (no oc tile to
-    shrink them) for the whole cell; the per-stage temporaries — incoming
-    band, patch staging, outgoing band — are sequential, only one stage's
-    set is live at a time, so their *maximum* is charged rather than
-    their sum.  The streamed input band and final output band are charged
-    once more on top, standing in for their pipeline double buffers.  The
-    same model backs the kernel-side ``auto_chain_block`` walk and the
-    planner's decline-to-fuse check, so the planner never approves a
-    chain the kernel cannot stage.
+    Chains hold every *intermediate* stage's full-width weights resident
+    (stage N+1 consumes every channel of stage N, so there is no oc tile
+    to shrink them); the per-stage temporaries — incoming band, patch
+    staging, outgoing band — are sequential, only one stage's set is live
+    at a time, so their *maximum* is charged rather than their sum.  The
+    streamed input band and final output band are charged once more on
+    top, standing in for their pipeline double buffers.  Nothing consumes
+    the FINAL stage's channels inside the cell, so ``oc_block_final``
+    restores oc-grid blocking there: the final weights, outgoing band,
+    and output stream shrink to one oc tile (the dominant resident-
+    weights term for deep chains).  The same model backs the kernel-side
+    ``auto_chain_block`` walk and the planner's decline-to-fuse check, so
+    the planner never approves a chain the kernel cannot stage.
     """
     dims = chain_stage_dims(h, w, c, chain, ocs)
     m, _, band, _, _ = chain_band_geometry(blk, chain, pool)
+    last = len(chain) - 1
     weights = 0
     stage_peak = 0
     in_rows, in_w = band, w + 2 * chain[0][5]
     for i, ((kh, kw, sy, sx, py, px), (oh, ow, ci, oc)) in enumerate(
             zip(chain, dims)):
+        if i == last and oc_block_final is not None:
+            oc = min(oc_block_final, oc)
         weights += kh * kw * ci * oc
         patch_c = kh * kw * ci if im2col else ci
         stage_peak = max(stage_peak,
@@ -743,6 +1009,8 @@ def chain_cell_bytes(blk, h, w, c, chain, ocs, pool,
         if i + 1 < len(chain):
             in_rows, in_w = m[i], ow + 2 * chain[i + 1][5]
     oh_f, ow_f, _, oc_f = dims[-1]
+    if oc_block_final is not None:
+        oc_f = min(oc_block_final, oc_f)
     if pool is not None:
         pkh, pkw, psy, psx = pool
         out_stream = blk * ((ow_f - pkw) // psx + 1) * oc_f
@@ -753,7 +1021,8 @@ def chain_cell_bytes(blk, h, w, c, chain, ocs, pool,
 
 
 def auto_chain_block(target, h, w, c, chain, ocs, pool,
-                     budget: int = None, im2col: bool = True) -> int:
+                     budget: int = None, im2col: bool = True,
+                     oc_block_final=None) -> int:
     """Largest final-row band whose chain-cell live set fits ``budget``
     (default ``CHAIN_VMEM_BUDGET_BYTES``); floors at one final row —
     which may exceed the budget: the planner's job is to keep such chains
@@ -762,14 +1031,15 @@ def auto_chain_block(target, h, w, c, chain, ocs, pool,
     candidates = [target] + [b for b in (512, 256, 128, 64, 32, 16, 8, 4,
                                          2, 1) if b < target]
     for blk in candidates:
-        if chain_cell_bytes(blk, h, w, c, chain, ocs, pool,
-                            im2col=im2col) <= budget:
+        if chain_cell_bytes(blk, h, w, c, chain, ocs, pool, im2col=im2col,
+                            oc_block_final=oc_block_final) <= budget:
             return blk
     return 1
 
 
 def resolve_chain_block(h, w, c, chain, ocs, pool, oh_block,
-                        im2col: bool = True, budget: int = None) -> tuple:
+                        im2col: bool = True, budget: int = None,
+                        oc_block_final=None) -> tuple:
     """The equalized final-row band a chain cell will execute with, as
     ``(blk, n_tiles)`` — the ``auto_chain_block`` walk when ``oh_block``
     is None, else the explicit final-stage conv band (snapped down to
@@ -788,7 +1058,8 @@ def resolve_chain_block(h, w, c, chain, ocs, pool, oh_block,
         target = oh_f
     if oh_block is None:
         blk = auto_chain_block(target, h, w, c, chain, ocs, pool,
-                               budget=budget, im2col=im2col)
+                               budget=budget, im2col=im2col,
+                               oc_block_final=oc_block_final)
     elif pool is not None:
         ohb = max(1, min(oh_block, oh_f))
         blk = max(1, (ohb - pkh) // psy + 1) if ohb >= pkh else 1
@@ -871,7 +1142,8 @@ def conv2d_chain_simd(x_nhwc, ws, bs, strides, paddings, relus,
                       im2col: bool = True, oh_block=None,
                       interpret: bool = False, pool_kernel=None,
                       pool_stride=None, pool_kind: str = "max",
-                      pool_relu: bool = False, lrn=None):
+                      pool_relu: bool = False, lrn=None,
+                      oc_block_final=None):
     """A chain of consecutive convolutions as one fused dispatch.
 
     ``ws``: per-stage HWIO weights (channel-contiguous: stage i's input
@@ -879,10 +1151,14 @@ def conv2d_chain_simd(x_nhwc, ws, bs, strides, paddings, relus,
     ``paddings``/``relus`` parallel per-stage lists.  Each grid cell
     computes an output-row band of the FINAL stage — pooled rows when
     ``pool_kernel`` is set — staging every intermediate band (halo
-    included) in VMEM; only the final band is written to HBM.  All stages
-    run at full output-channel width (stage N+1 consumes every channel of
-    stage N).  ``im2col`` selects the advanced (patch-matrix matmul) or
-    basic (per-position channel dots) stage compute.
+    included) in VMEM; only the final band is written to HBM.
+    Intermediate stages run at full output-channel width (stage N+1
+    consumes every channel of stage N); ``oc_block_final`` restores
+    oc-grid blocking on the FINAL stage, whose channels nothing inside
+    the cell consumes — earlier stages recompute per oc tile, trading
+    MACs for the dominant resident-weights term.  ``im2col`` selects the
+    advanced (patch-matrix matmul) or basic (per-position channel dots)
+    stage compute.
     """
     n, h, wd, c = x_nhwc.shape
     s = len(ws)
@@ -890,6 +1166,9 @@ def conv2d_chain_simd(x_nhwc, ws, bs, strides, paddings, relus,
         raise ValueError("chain stage lists must have equal length")
     if lrn is not None and pool_kernel is None:
         raise ValueError("fused LRN epilogue requires a fused pool epilogue")
+    if oc_block_final is not None and lrn is not None:
+        raise ValueError("oc-blocked final stage requires no LRN epilogue "
+                         "(the LRN window reads every output channel)")
     chain = tuple((w.shape[0], w.shape[1], st[0], st[1], pd[0], pd[1])
                   for w, st, pd in zip(ws, strides, paddings))
     ocs = tuple(w.shape[3] for w in ws)
@@ -898,6 +1177,8 @@ def conv2d_chain_simd(x_nhwc, ws, bs, strides, paddings, relus,
         if oh_i < 1 or ow_i < 1:
             raise ValueError("chain stage output collapsed to zero size")
     oh_f, ow_f, _, oc_f = dims[-1]
+    if oc_block_final is not None and oc_block_final >= oc_f:
+        oc_block_final = None  # full width already: classic dispatch
     if pool_kernel is not None:
         pkh, pkw = pool_kernel
         psy, psx = pool_stride if pool_stride is not None else pool_kernel
@@ -912,7 +1193,8 @@ def conv2d_chain_simd(x_nhwc, ws, bs, strides, paddings, relus,
         pool_g, pool = None, None
         target, out_cols = oh_f, ow_f
     blk, n_tiles = resolve_chain_block(h, wd, c, chain, ocs, pool_g,
-                                       oh_block, im2col=im2col)
+                                       oh_block, im2col=im2col,
+                                       oc_block_final=oc_block_final)
     m, offs, band, in_step, in_base = chain_band_geometry(blk, chain, pool_g)
     # stage-0 padding host-side (+ the extra top rows the intermediate
     # vertical padding pulls the first band up into, all genuine zeros)
@@ -929,6 +1211,66 @@ def conv2d_chain_simd(x_nhwc, ws, bs, strides, paddings, relus,
         for i, (kh, kw, sy, sx, py, px) in enumerate(chain))
     kern = functools.partial(_chain_simd_kernel, stages=stages, pool=pool,
                              lrn=lrn, im2col=im2col)
+    if oc_block_final is not None:
+        # oc-blocked final stage: the kernel body is unchanged (it derives
+        # every stage width from its weight block), only the grid gains an
+        # oc axis and the final stage's weight/bias/output specs block on
+        # it — intermediate stages recompute their full-width bands per
+        # oc tile
+        ocb_f = oc_block_final
+        pad_f = (-oc_f) % ocb_f
+        wlast, blast = ws[-1], bs[-1]
+        if pad_f:
+            wlast = jnp.pad(wlast, ((0, 0), (0, 0), (0, 0), (0, pad_f)))
+            blast = jnp.pad(blast, (0, pad_f))
+        ocp_f = oc_f + pad_f
+        in_specs = [
+            pl.BlockSpec((1, band, wp0, c),
+                         lambda i, t, o: (i, t * in_step + base, 0, 0),
+                         indexing_mode=pl.Unblocked()),
+        ]
+        operands = [xp]
+        last_w = s - 1
+        for si, (w, b) in enumerate(zip(ws, bs)):
+            if si == last_w:
+                w, b = wlast, blast
+            kh, kw, ci, oc = w.shape
+            if im2col:
+                operands.append(w.reshape(kh * kw * ci, oc))
+                if si == last_w:
+                    in_specs.append(pl.BlockSpec((kh * kw * ci, ocb_f),
+                                                 lambda i, t, o: (0, o)))
+                else:
+                    in_specs.append(pl.BlockSpec((kh * kw * ci, oc),
+                                                 lambda i, t, o: (0, 0)))
+            else:
+                operands.append(w)
+                if si == last_w:
+                    in_specs.append(pl.BlockSpec(
+                        (kh, kw, ci, ocb_f), lambda i, t, o: (0, 0, 0, o)))
+                else:
+                    in_specs.append(pl.BlockSpec(
+                        (kh, kw, ci, oc), lambda i, t, o: (0, 0, 0, 0)))
+            operands.append(b)
+            if si == last_w:
+                in_specs.append(pl.BlockSpec((ocb_f,),
+                                             lambda i, t, o: (o,)))
+            else:
+                in_specs.append(pl.BlockSpec((oc,), lambda i, t, o: (0,)))
+        out = pl.pallas_call(
+            kern,
+            grid=(n, n_tiles, ocp_f // ocb_f),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((None, blk, out_cols, ocb_f),
+                                   lambda i, t, o: (i, t, 0, o)),
+            out_shape=jax.ShapeDtypeStruct(
+                (n, n_tiles * blk, out_cols, ocp_f), x_nhwc.dtype),
+            compiler_params=pltpu.TPUCompilerParams(
+                dimension_semantics=("parallel", "parallel", "parallel")
+            ),
+            interpret=interpret,
+        )(*operands)
+        return out[:, :target, :, :oc_f]
     in_specs = [
         # element-offset indexing: chain bands overlap by the composed halo
         pl.BlockSpec((1, band, wp0, c),

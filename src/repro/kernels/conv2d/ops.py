@@ -37,13 +37,15 @@ def _on_tpu() -> bool:
 @partial(jax.jit, static_argnames=("stride", "padding", "relu", "method",
                                    "oh_block", "interpret", "pool_kernel",
                                    "pool_stride", "pool_kind", "pool_relu",
-                                   "lrn_n", "lrn_alpha", "lrn_beta", "lrn_k"))
+                                   "lrn_n", "lrn_alpha", "lrn_beta", "lrn_k",
+                                   "pool_carry", "lrn_oc_block"))
 def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
            method: str = "advanced_simd_128", oh_block: int = None,
            interpret: bool = None, pool_kernel=None, pool_stride=None,
            pool_kind: str = "max", pool_relu: bool = False,
            lrn_n: int = None, lrn_alpha: float = 1e-4,
-           lrn_beta: float = 0.75, lrn_k: float = 1.0):
+           lrn_beta: float = 0.75, lrn_k: float = 1.0,
+           pool_carry: bool = None, lrn_oc_block: bool = None):
     """x: [N, C, H, W]; w: [OC, C, KH, KW]; b: [OC].
 
     ``pool_kernel``/``pool_stride`` (SIMD methods only) fuse a VALID
@@ -55,6 +57,12 @@ def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
     (``engine._lrn`` semantics, asymmetric padding for even ``lrn_n``) so
     only the *normalized* band is written — AlexNet's conv→relu→pool→norm
     in one dispatch.
+
+    ``pool_carry`` / ``lrn_oc_block`` (advanced SIMD only) select the
+    second-generation fused cells: the sliding-window pool accumulator
+    (carry the pool-halo conv rows between bands in VMEM scratch) and the
+    two-pass channel-halo LRN cell (oc blocking with window-widened
+    weight tiles).  ``None`` = the kernel resolvers decide.
     """
     interp = (not _on_tpu()) if interpret is None else interpret
     if method == "basic_parallel":
@@ -85,7 +93,9 @@ def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
                                      pool_kernel=pool_kernel,
                                      pool_stride=pool_stride,
                                      pool_kind=pool_kind,
-                                     pool_relu=pool_relu, lrn=lrn)
+                                     pool_relu=pool_relu, lrn=lrn,
+                                     pool_carry=pool_carry,
+                                     lrn_oc_block=lrn_oc_block)
     else:
         raise ValueError(method)
     return nhwc_to_nchw(out)
@@ -94,13 +104,15 @@ def conv2d(x, w, b, stride=(1, 1), padding=(0, 0), relu=False,
 @partial(jax.jit, static_argnames=("strides", "paddings", "relus", "method",
                                    "oh_block", "interpret", "pool_kernel",
                                    "pool_stride", "pool_kind", "pool_relu",
-                                   "lrn_n", "lrn_alpha", "lrn_beta", "lrn_k"))
+                                   "lrn_n", "lrn_alpha", "lrn_beta", "lrn_k",
+                                   "oc_block_final"))
 def conv2d_chain(x, ws, bs, strides, paddings, relus,
                  method: str = "advanced_simd_128", oh_block: int = None,
                  interpret: bool = None, pool_kernel=None, pool_stride=None,
                  pool_kind: str = "max", pool_relu: bool = False,
                  lrn_n: int = None, lrn_alpha: float = 1e-4,
-                 lrn_beta: float = 0.75, lrn_k: float = 1.0):
+                 lrn_beta: float = 0.75, lrn_k: float = 1.0,
+                 oc_block_final: int = None):
     """A chain of consecutive convolutions as ONE fused dispatch.
 
     ``x``: [N, C, H, W]; ``ws``/``bs``: per-stage OIHW weights and biases
@@ -140,7 +152,8 @@ def conv2d_chain(x, ws, bs, strides, paddings, relus,
                               im2col=im2col, oh_block=oh_block,
                               interpret=interp, pool_kernel=pool_kernel,
                               pool_stride=pool_stride, pool_kind=pool_kind,
-                              pool_relu=pool_relu, lrn=lrn)
+                              pool_relu=pool_relu, lrn=lrn,
+                              oc_block_final=oc_block_final)
     return nhwc_to_nchw(out[..., :oc_f])
 
 

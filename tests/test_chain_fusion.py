@@ -118,12 +118,16 @@ def test_planner_falls_back_to_shorter_chain():
     ))
     full = fusion_summary(plan_fusion(net, method_for=lambda n: SIMD))
     assert full == [("c1", "c2", "c3", "p")]
-    # budget that fits a 2-chain floor cell but not the 3-chain's
+    # budget that fits a 2-chain floor cell but not the 3-chain's, not
+    # even with the oc-blocked final stage (the new admission rung sits
+    # between "full chain" and "drop the trailing conv")
     convs = [l for l in net.layers if l.kind == "conv"]
     pool = net.layers[-1]
     need3 = chain_working_set(convs, pool, SIMD, 64, 16, 64)
+    need3_blocked = chain_working_set(convs, pool, SIMD, 64, 16, 64,
+                                      oc_block_final=8)
     need2 = chain_working_set(convs[:2], None, SIMD, 64, 16, 64)
-    assert need2 < need3
+    assert need2 < need3_blocked < need3
     groups = fusion_summary(plan_fusion(net, method_for=lambda n: SIMD,
                                         vmem_budget=(need2 + need3) // 2))
     assert groups == [("c1", "c2"), ("c3", "p")]
@@ -134,6 +138,49 @@ def test_planner_falls_back_to_shorter_chain():
     # full chain regardless of budget
     assert fusion_summary(plan_fusion(
         net, method_for=lambda n: SIMD, vmem_check=False)) == full
+
+
+def test_planner_blocks_final_stage_before_dropping_conv():
+    """A budget too small for the full chain but large enough for its
+    oc-blocked-final-stage variant keeps the WHOLE chain, with
+    ``oc_block_final`` recorded on the group — the new admission rung
+    fires before any trailing conv is popped."""
+    net = NetworkDef("t", (64, 16, 64), 4, (
+        _conv("c1", 64), _conv("c2", 64), _conv("c3", 64),
+        LayerSpec("pool", "p", kernel=(2, 2), stride=(2, 2)),
+    ))
+    convs = [l for l in net.layers if l.kind == "conv"]
+    pool = net.layers[-1]
+    need3 = chain_working_set(convs, pool, SIMD, 64, 16, 64)
+    need3_blocked = chain_working_set(convs, pool, SIMD, 64, 16, 64,
+                                      oc_block_final=8)
+    assert need3_blocked < need3
+    plan = plan_fusion(net, method_for=lambda n: SIMD,
+                       vmem_budget=(need3_blocked + need3) // 2)
+    assert fusion_summary(plan) == [("c1", "c2", "c3", "p")]
+    (g,) = [it for it in plan if isinstance(it, FusedLayerSpec)]
+    assert g.oc_block_final == 8
+
+
+def test_chain_cell_bytes_shrinks_with_oc_block_final():
+    """Blocking the final stage must shrink the modelled cell: the final
+    weight block and the final accumulator/output tiles drop from
+    full-width oc to the block."""
+    chain = ((3, 3, 1, 1, 1, 1), (3, 3, 1, 1, 1, 1), (3, 3, 1, 1, 1, 1))
+    ocs = (384, 384, 256)
+    for pool in ((3, 3, 2, 2), None):
+        for im2col in (True, False):
+            full = K.chain_cell_bytes(2, 13, 13, 256, chain, ocs, pool,
+                                      im2col=im2col)
+            blocked = K.chain_cell_bytes(2, 13, 13, 256, chain, ocs, pool,
+                                         im2col=im2col, oc_block_final=8)
+            assert blocked < full
+            # monotone in the block width, capped at full width
+            sizes = [K.chain_cell_bytes(2, 13, 13, 256, chain, ocs, pool,
+                                        im2col=im2col, oc_block_final=b)
+                     for b in (8, 32, 128, 256)]
+            assert sizes == sorted(sizes)
+            assert sizes[-1] == full
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +264,40 @@ def test_chain_lrn_tail(method, lrn_n):
                        interpret=True, pool_kernel=(3, 3),
                        pool_stride=(2, 2), lrn_n=lrn_n, **lrn_kw)
     assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+@pytest.mark.parametrize("obf", [4, 8])
+@pytest.mark.parametrize("pool", [None, ("max", (3, 3), (2, 2))])
+def test_chain_oc_block_final_matches_per_layer(obf, pool):
+    """The oc-blocked final stage: the outer oc-tile grid axis recomputes
+    the upstream stages per tile but must reproduce the full-width chain
+    exactly (same fp32 accumulation order per output element)."""
+    x, ws, bs = _chain_case(2, 5, 20, 18, (7, 6, 9), (3, 3, 5), seed=11)
+    strides = ((1, 1),) * 3
+    pads = ((1, 1), (1, 1), (2, 2))
+    relus = (True, True, False)
+    ref = _ref_chain(x, ws, bs, strides, pads, relus)
+    kwargs = {}
+    if pool is not None:
+        kind, pk, ps = pool
+        ref = pool2d_ref(ref, pk, ps, kind)
+        kwargs = dict(pool_kernel=pk, pool_stride=ps, pool_kind=kind)
+    for ohb in (None, 4):
+        out = conv2d_chain(x, ws, bs, strides, pads, relus,
+                           method="advanced_simd_128", interpret=True,
+                           oh_block=ohb, oc_block_final=obf, **kwargs)
+        assert out.shape == ref.shape
+        assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+def test_chain_oc_block_final_rejects_lrn():
+    x, ws, bs = _chain_case(1, 3, 12, 12, (4, 4), (3, 3))
+    strides, pads, relus = ((1, 1),) * 2, ((1, 1),) * 2, (True, True)
+    with pytest.raises(ValueError, match="LRN"):
+        conv2d_chain(x, ws, bs, strides, pads, relus,
+                     method="advanced_simd_128", interpret=True,
+                     pool_kernel=(2, 2), pool_stride=(2, 2), lrn_n=5,
+                     oc_block_final=4)
 
 
 def test_chain_rejects_non_simd_and_bare_lrn():

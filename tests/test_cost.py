@@ -106,6 +106,29 @@ def test_vmem_matches_verifier_resolved_geometry():
     assert banded > 0
 
 
+def test_overfetch_sees_carry_geometry():
+    """A carry-enabled fused step runs one extra (prologue) band step but
+    fetches ``carry`` fewer rows per step — the input charge must follow
+    the carry geometry (steps x reduced band), not the classic
+    n_tiles x band product."""
+    from repro.core.cost import _overfetch
+
+    kw = dict(method=SIMD, fuse=True, use_pallas=True,
+              per_layer_fuse={"norm1": False, "norm2": False})
+    net = NETWORKS["alexnet"]
+    carry = compile_plan(net(), per_layer_pool_carry={"conv1": True}, **kw)
+    classic = compile_plan(net(), per_layer_pool_carry={"conv1": False},
+                           **kw)
+    geo_c, _ = step_band_params(carry, carry.steps[0])
+    geo_0, _ = step_band_params(classic, classic.steps[0])
+    assert geo_c["carry"] > 0 and geo_c["steps"] == geo_c["n_tiles"] + 1
+    assert geo_0["carry"] == 0 and geo_0["steps"] == geo_0["n_tiles"]
+    assert geo_c["band"] == geo_0["band"] - geo_c["carry"]
+    assert _overfetch(geo_c) == pytest.approx(
+        geo_c["steps"] * geo_c["band"] / geo_c["padded_h"])
+    assert _overfetch(geo_c) != _overfetch(geo_0)
+
+
 def test_xla_path_charges_no_overfetch_and_no_vmem():
     plan = compile_plan(NETWORKS["alexnet"](), method=SIMD, fuse=True,
                         use_pallas=False)
@@ -137,10 +160,36 @@ def test_model_load_roundtrip_and_backend_fallback(tmp_path):
                              "backends": {"cpu": m.to_dict()}}))
     back = CostModel.load(str(p), backend="cpu")
     assert back.to_dict() == m.to_dict()
-    # a backend with no fitted entry falls back to the sole fitted one
+    # an exact match records no substitution
+    assert back.fallback_from is None
+    # a backend with no fitted entry falls back to the sole fitted one,
+    # and the substitution is RECORDED — never silent (the requested
+    # backend is kept so reports can flag the borrowed coefficients)
     tpu = CostModel.load(str(p), backend="tpu")
     assert tpu.backend == "cpu"
     assert tpu.us_per_gb == 3.0
+    assert tpu.fallback_from == "tpu"
+
+
+def test_fallback_surfaces_in_plan_cost(tmp_path):
+    """plan_cost built from a fallback model must carry the provenance
+    through to the rendered table."""
+    m = CostModel(backend="cpu",
+                  us_per_gflop={k: 2.0 for k in FLOP_KEYS},
+                  us_per_gb=3.0, dispatch_us=4.0)
+    p = tmp_path / "COST_MODEL.json"
+    p.write_text(json.dumps({"format_version": 1,
+                             "backends": {"cpu": m.to_dict()}}))
+    plan = compile_plan(NETWORKS["lenet5"](), method=SIMD, fuse=True)
+    borrowed = CostModel.load(str(p), backend="tpu")
+    pc = plan_cost(plan, borrowed, batch=2)
+    assert pc.model_backend == "cpu"
+    assert pc.model_fallback_from == "tpu"
+    assert "cross-backend fallback" in pc.table_markdown()
+    # an exact-match model renders no fallback note
+    exact = plan_cost(plan, CostModel.load(str(p), backend="cpu"), batch=2)
+    assert exact.model_fallback_from is None
+    assert "fallback" not in exact.table_markdown()
 
 
 def test_committed_model_loads_and_prices():

@@ -9,6 +9,7 @@ from repro.core.engine import CNNEngine, _lrn
 from repro.core.fusion import (
     FusedLayerSpec,
     fusion_summary,
+    group_band_params,
     plan_fusion,
 )
 from repro.core.methods import Method, conv2d_pool_fused
@@ -135,21 +136,27 @@ def test_planner_declines_over_budget_shape():
         vmem_check=False)) == [("c", "p")]
 
 
-def test_planner_drops_lrn_tail_before_declining():
+def test_planner_keeps_lrn_tail_via_channel_halo_blocking():
     """The full-width oc tile the LRN epilogue needs busts the budget for
-    a 4096-channel conv, but the oc-blocked conv+pool floor cell fits:
-    only the LRN tail is dropped from the group."""
+    a 4096-channel conv; the channel-halo cell oc-blocks the epilogue so
+    the planner keeps the LRN tail it used to drop.  Only when even the
+    blocked floor cell busts does the drop-LRN rung fire."""
     net = NetworkDef("t", (64, 16, 128), 4, (
         LayerSpec("conv", "c", out_channels=4096, kernel=(3, 3),
                   padding=(1, 1), relu=True),
         LayerSpec("pool", "p", kernel=(3, 3), stride=(2, 2)),
         LayerSpec("lrn", "n"),
     ))
-    assert fusion_summary(plan_fusion(
-        net, method_for=lambda n: SIMD)) == [("c", "p")]
+    groups = plan_fusion(net, method_for=lambda n: SIMD)
+    assert fusion_summary(groups) == [("c", "p", "n")]
     assert fusion_summary(plan_fusion(
         net, method_for=lambda n: SIMD,
         vmem_budget=1 << 40)) == [("c", "p", "n")]
+    # below the blocked floor the LRN tail still drops (old behaviour)
+    geo = group_band_params(groups[0], SIMD, (64, 16, 128), None)
+    assert fusion_summary(plan_fusion(
+        net, method_for=lambda n: SIMD,
+        vmem_budget=geo["floor_bytes"] - 1)) == [("c", "p")]
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +261,115 @@ def test_fused_lrn_requires_pool():
     with pytest.raises(ValueError, match="SIMD"):
         conv2d_pallas(x, w, b, method="basic_parallel", interpret=True,
                       lrn_n=5)
+
+
+# ---------------------------------------------------------------------------
+# second-generation cells: sliding-window pool carry + channel-halo LRN
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["max", "avg"])
+@pytest.mark.parametrize("conv_stride,pad", [((1, 1), (1, 1)),
+                                             ((2, 2), (0, 0))])
+def test_fused_carry_matches_per_layer(kind, conv_stride, pad):
+    """The sliding-window pool accumulator: adjacent oh-bands share the
+    pool-halo conv rows through VMEM scratch (one sacrificial prologue
+    band seeds the carry) and must reproduce the classic fused cell."""
+    from repro.kernels.conv2d import kernels as K
+
+    x, w, b = _case(2, 4, 33, 21, 6, 3, seed=9)
+    ref = pool2d_ref(conv2d_ref(x, w, b, conv_stride, pad, relu=True),
+                     (3, 3), (2, 2), kind)
+    # the gate must actually open for this geometry (overlapping pool,
+    # several bands) — otherwise this test silently runs the classic cell
+    oh = (33 + 2 * pad[0] - 3) // conv_stride[0] + 1
+    ph = (oh - 3) // 2 + 1
+    n_tiles = -(-ph // 5)
+    assert K.resolve_pool_carry(True, True, None, (3, 3, 2, 2), 5, n_tiles)
+    out = conv2d_pallas(x, w, b, conv_stride, pad, relu=True,
+                        method="advanced_simd_128", interpret=True,
+                        oh_block=5, pool_kernel=(3, 3), pool_stride=(2, 2),
+                        pool_kind=kind, pool_carry=True)
+    assert out.shape == ref.shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+def test_fused_carry_gate_declines_disjoint_pool():
+    """A disjoint pool (stride == window) has no halo rows to carry: the
+    resolver must decline even when the knob is forced on, and the output
+    must still be exact."""
+    from repro.kernels.conv2d import kernels as K
+
+    assert not K.resolve_pool_carry(True, True, None, (2, 2, 2, 2), 4, 3)
+    x, w, b = _case(1, 4, 32, 16, 6, 3, seed=2)
+    ref = pool2d_ref(conv2d_ref(x, w, b, (1, 1), (1, 1), relu=True),
+                     (2, 2), (2, 2), "max")
+    out = conv2d_pallas(x, w, b, (1, 1), (1, 1), relu=True,
+                        method="advanced_simd_128", interpret=True,
+                        oh_block=4, pool_kernel=(2, 2), pool_stride=(2, 2),
+                        pool_carry=True)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+@pytest.mark.parametrize("lrn_n", [4, 5])  # even n: asymmetric halo split
+def test_fused_lrn_oc_block_matches_per_layer(lrn_n):
+    """The two-pass channel-halo cell: oc-blocked grid with window-widened
+    weight tiles, each tile normalizing its core channels against the
+    halo — vs the full-width per-layer reference chain."""
+    x, w, b = _case(2, 5, 20, 18, 7, 5)
+    ref = _lrn_ref(pool2d_ref(conv2d_ref(x, w, b, (1, 1), (2, 2), relu=True),
+                              (3, 3), (2, 2), "max"), lrn_n)
+    # oc_block 4 < oc 7: genuinely blocked (2 oc tiles with halo columns)
+    out = conv2d_pallas(x, w, b, (1, 1), (2, 2), relu=True,
+                        method="advanced_simd_4", interpret=True,
+                        pool_kernel=(3, 3), pool_stride=(2, 2),
+                        pool_kind="max", lrn_n=lrn_n, lrn_oc_block=True,
+                        **_LRN)
+    assert out.shape == ref.shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+def test_fused_lrn_oc_block_multi_tile():
+    """Channel-halo LRN cell banded over oh as well: both grid axes
+    (band tiles × oc tiles) active at once."""
+    x, w, b = _case(1, 4, 33, 21, 6, 3)
+    ref = _lrn_ref(pool2d_ref(conv2d_ref(x, w, b, (1, 1), (1, 1),
+                                         relu=True), (3, 3), (2, 2), "max"),
+                   5)
+    out = conv2d_pallas(x, w, b, (1, 1), (1, 1), relu=True,
+                        method="advanced_simd_4", interpret=True,
+                        oh_block=5, pool_kernel=(3, 3), pool_stride=(2, 2),
+                        pool_kind="max", lrn_n=5, lrn_oc_block=True, **_LRN)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+def test_engine_second_gen_knobs_match_ref():
+    """Per-layer second-generation knobs thread engine → plan → methods →
+    kernels and stay numerically exact on a multi-band net."""
+    net = NetworkDef("t", (3, 33, 21), 4, (
+        LayerSpec("conv", "c1", out_channels=6, kernel=(3, 3),
+                  padding=(1, 1), relu=True),
+        LayerSpec("pool", "p1", kernel=(3, 3), stride=(2, 2)),
+        LayerSpec("conv", "c2", out_channels=7, kernel=(3, 3),
+                  padding=(1, 1), relu=True),
+        LayerSpec("pool", "p2", kernel=(3, 3), stride=(2, 2)),
+        LayerSpec("lrn", "n2", lrn_n=5, **_LRN),
+        LayerSpec("flatten", "flatten"),
+        LayerSpec("fc", "f1", out_channels=4),
+    ))
+    ref_eng = CNNEngine(net, method=Method.SEQ_REF)
+    params = ref_eng.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *net.input_shape),
+                          jnp.float32)
+    ref = ref_eng.forward(params, x)
+    eng = CNNEngine(net, method=Method.ADVANCED_SIMD_4, use_pallas=True,
+                    per_layer_oh_blocks={"c1": 5},
+                    per_layer_pool_carry={"c1": True},
+                    per_layer_lrn_oc_block={"c2": True})
+    assert fusion_summary(eng.plan(True)) == [("c1", "p1"),
+                                              ("c2", "p2", "n2")]
+    out = eng.forward(params, x, fuse=True)
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
 
 
 # ---------------------------------------------------------------------------

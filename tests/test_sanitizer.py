@@ -39,6 +39,26 @@ def _rules(findings):
     return {f.rule for f in findings}
 
 
+def _sanitize_carry(sources=None):
+    """A fused conv→pool dispatch whose geometry opens the carry gate
+    (overlapping pool, 4 bands) with the knob forced on."""
+    return sanitize_conv2d((2, 33, 21, 8), (3, 3, 8, 16), padding=(1, 1),
+                           relu=True, im2col=True, oh_block=5,
+                           pool_kernel=(3, 3), pool_stride=(2, 2),
+                           pool_carry=True, sources=sources)
+
+
+def _sanitize_halo(sources=None):
+    """A fused conv→pool→LRN dispatch forced onto the two-pass
+    channel-halo cell: oc_block 4 against 16 output channels gives 4 oc
+    tiles, each reading lrn_n - 1 = 4 halo weight columns."""
+    return sanitize_conv2d((2, 20, 18, 8), (5, 5, 8, 16), padding=(2, 2),
+                           relu=True, im2col=True, oc_block=4,
+                           pool_kernel=(3, 3), pool_stride=(2, 2),
+                           lrn=(5, 2e-2, 0.75, 2.0), lrn_oc_block=True,
+                           sources=sources)
+
+
 # -- clean kernels prove clean ----------------------------------------------
 
 
@@ -55,7 +75,10 @@ def test_clean_full_sweep_grid():
     finally:
         sys.path.pop(0)
     findings, combos, dispatches = sanitize_cli.sweep()
-    assert combos == 36
+    # 3 nets x 3 methods x 2 fuse x 2 backends, plus the forced
+    # second-generation cell configs (carry / channel-halo LRN /
+    # oc-blocked chain final stage)
+    assert combos == 36 + len(sanitize_cli.EXTRA_CONFIGS)
     assert dispatches > 100
     assert findings == []
 
@@ -74,6 +97,15 @@ def test_clean_single_dispatches():
                        paddings=[(1, 1), (1, 1)], relus=[True, True],
                        pool_kernel=(2, 2), pool_stride=(2, 2),
                        oh_block=4),
+        # second-generation cells: sliding-window pool carry, two-pass
+        # channel-halo LRN, oc-blocked chain final stage
+        _sanitize_carry(),
+        _sanitize_halo(),
+        sanitize_chain((2, 28, 28, 8), [(3, 3, 8, 16), (3, 3, 16, 16)],
+                       strides=[(1, 1), (1, 1)],
+                       paddings=[(1, 1), (1, 1)], relus=[True, True],
+                       pool_kernel=(2, 2), pool_stride=(2, 2),
+                       oh_block=4, oc_block_final=8),
     ):
         assert f == []
 
@@ -187,6 +219,92 @@ def test_k105_geometry_disagreement():
     geom = dict(geom, band=geom["band"] + 1)
     bad = sanitize_cli._cross_check(geom, plan, step, "step")
     assert [f.rule for f in bad] == ["K105"]
+
+
+# -- K106: VMEM scratch carry discipline ------------------------------------
+
+
+def test_k106_stale_carry_rows():
+    """Storing the HEAD of the fresh band instead of its tail leaves the
+    next band step consuming rows that are not the boundary rows — the
+    carry-discipline proof must fire exactly K106."""
+    sources = _mutate(
+        "jax.lax.slice_in_dim(fresh, r_rows - k_rows, r_rows, axis=0)",
+        "jax.lax.slice_in_dim(fresh, 0, k_rows, axis=0)")
+    f, _ = _sanitize_carry(sources=sources)
+    assert _rules(f) == {"K106"}
+
+
+def test_k106_carry_axis_not_arbitrary():
+    """The carried (band) grid axis must be 'arbitrary': a parallel axis
+    gives the compiler licence to reorder band steps and the scratch
+    hand-off breaks."""
+    sources = _mutate(
+        'dimension_semantics=("parallel", "parallel", "arbitrary")',
+        'dimension_semantics=("parallel", "parallel", "parallel")')
+    f, _ = _sanitize_carry(sources=sources)
+    assert "K106" in _rules(f)
+
+
+def test_k106_needs_a_carry_dispatch():
+    """The classic (no-scratch) fused cell must never draw K106."""
+    f, _ = sanitize_conv2d((2, 33, 21, 8), (3, 3, 8, 16), padding=(1, 1),
+                           relu=True, im2col=True, oh_block=5,
+                           pool_kernel=(3, 3), pool_stride=(2, 2),
+                           pool_carry=False)
+    assert f == []
+
+
+# -- K101 on the channel-halo cell: oc-tile under-fetch ----------------------
+
+
+def test_k101_halo_weight_underfetch():
+    """Dropping the host-side halo widening of the weight matrix leaves
+    the unblocked weight spec reading ``lrn_n - 1`` columns past the
+    operand for the last oc tile — a spec-level K101 under-fetch."""
+    sources = _mutate("wmat = jnp.pad(wmat, ((0, 0), (halo_lo, halo_hi)))",
+                      "wmat = jnp.pad(wmat, ((0, 0), (0, 0)))")
+    f, _ = _sanitize_halo(sources=sources)
+    assert "K101" in _rules(f)
+
+
+# -- Phase-A re-derivations track the trusted resolvers ----------------------
+
+
+@pytest.mark.parametrize("pool_carry", [None, True, False])
+@pytest.mark.parametrize("pool,phb,n_tiles", [
+    ((3, 3, 2, 2), 5, 4), ((3, 3, 2, 2), 1, 2), ((2, 2, 2, 2), 4, 3),
+    ((3, 3, 1, 1), 2, 5), ((5, 5, 2, 2), 1, 3), ((3, 3, 2, 2), 5, 1),
+])
+def test_phase_a_pool_carry_matches_resolver(pool_carry, pool, phb,
+                                             n_tiles):
+    """The sanitizer's from-scratch carry gate must agree with the
+    trusted kernel resolver over the whole config space (the K105
+    N-version contract, checked directly)."""
+    from repro.kernels.conv2d import kernels as K
+
+    for im2col in (True, False):
+        for lrn in (None, (5, 2e-2, 0.75, 2.0)):
+            assert sanitizer._a_resolve_pool_carry(
+                pool_carry, im2col, lrn, pool, phb, n_tiles) \
+                == K.resolve_pool_carry(pool_carry, im2col, lrn, pool,
+                                        phb, n_tiles)
+
+
+@pytest.mark.parametrize("lrn_oc_block", [None, True, False])
+@pytest.mark.parametrize("oc,oc_block", [
+    (96, 8), (96, 128), (16, 4), (8, 8), (2048, 8), (7, 4),
+])
+def test_phase_a_lrn_ocb_matches_resolver(lrn_oc_block, oc, oc_block):
+    from repro.kernels.conv2d import kernels as K
+
+    pool = (3, 3, 2, 2)
+    for lrn in (None, (5, 2e-2, 0.75, 2.0), (4, 2e-2, 0.75, 2.0)):
+        for ow, wp, c in ((54, 58, 8), (13, 17, 2048)):
+            args = (oc, oc_block, lrn, lrn_oc_block, ow, wp, c, 5, 5, 1,
+                    pool)
+            assert sanitizer._a_resolve_lrn_ocb(*args) \
+                == K.resolve_lrn_ocb(*args)
 
 
 # -- K100: unproven dispatches fail loudly ----------------------------------

@@ -163,7 +163,7 @@ def test_unsnapped_pool_band_detected(monkeypatch):
     """A pool band resolver that ignores the pool-stride snap entirely
     (hands back the raw conv oh_block) breaks the fair-share invariant."""
     def unsnapped(ph, oh, ow, wp, c, kh, kw, sy, ocb, pool, oh_block,
-                  im2col=True):
+                  im2col=True, oc_halo=0):
         ohb = max(1, min(oh_block, ph))
         return ohb, -(-ph // ohb)
 

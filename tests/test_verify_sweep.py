@@ -39,7 +39,9 @@ def test_sweep_single_injected_net_is_clean():
 
 def test_sweep_defaults_to_bundled_registry():
     findings, combos = verify_sweep.sweep()
-    assert combos == 12 * len(NETWORKS)
+    # the base grid plus the forced second-generation cell configs
+    # (carry / channel-halo LRN / oc-blocked chain final stage)
+    assert combos == 12 * len(NETWORKS) + len(verify_sweep.EXTRA_CONFIGS)
     assert findings == []
 
 

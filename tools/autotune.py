@@ -56,6 +56,9 @@ def default_knobs(use_pallas: bool = False) -> Dict:
         "fuse": True,
         "fuse_relu": True,
         "per_layer_fuse": {},
+        "per_layer_pool_carry": {},
+        "per_layer_lrn_oc_block": {},
+        "per_layer_oc_block_final": {},
         "use_pallas": use_pallas,
     }
 
@@ -92,7 +95,12 @@ def tune(net, model: CostModel, batch: int = 8, use_pallas: bool = False,
         cand = {**knobs,
                 "per_layer_methods": dict(knobs["per_layer_methods"]),
                 "per_layer_oh_blocks": dict(knobs["per_layer_oh_blocks"]),
-                "per_layer_fuse": dict(knobs["per_layer_fuse"])}
+                "per_layer_fuse": dict(knobs["per_layer_fuse"]),
+                "per_layer_pool_carry": dict(knobs["per_layer_pool_carry"]),
+                "per_layer_lrn_oc_block":
+                    dict(knobs["per_layer_lrn_oc_block"]),
+                "per_layer_oc_block_final":
+                    dict(knobs["per_layer_oc_block_final"])}
         mutate(cand)
         _, cost = score(net, cand, model, batch)
         if cost is None or cost.us >= best * (1.0 - EPSILON):
@@ -125,6 +133,29 @@ def tune(net, model: CostModel, batch: int = 8, use_pallas: bool = False,
                     name, "fuse", False,
                     lambda c, n=name: c["per_layer_fuse"]
                     .__setitem__(n, False))
+            # second-generation fused-cell axes (None = the resolvers'
+            # auto rule IS the start point, so only explicit pins move)
+            for v in axes.get("pool_carry", ()):
+                if v is None:
+                    continue
+                improved |= try_move(
+                    name, "pool_carry", v,
+                    lambda c, n=name, v=v: c["per_layer_pool_carry"]
+                    .__setitem__(n, v))
+            for v in axes.get("lrn_oc_block", ()):
+                if v is None:
+                    continue
+                improved |= try_move(
+                    name, "lrn_oc_block", v,
+                    lambda c, n=name, v=v: c["per_layer_lrn_oc_block"]
+                    .__setitem__(n, v))
+            for v in axes.get("oc_block_final", ()):
+                if v is None:
+                    continue
+                improved |= try_move(
+                    name, "oc_block_final", v,
+                    lambda c, n=name, v=v: c["per_layer_oc_block_final"]
+                    .__setitem__(n, v))
         if not improved:
             break
 

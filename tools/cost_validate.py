@@ -56,13 +56,18 @@ def validate(bench: dict, model: CostModel) -> dict:
     return {"rows": rows, "spearman": rho, "per_network": per_net}
 
 
-def markdown(report: dict, threshold: float, backend: str) -> str:
+def markdown(report: dict, threshold: float, backend: str,
+             fallback_from: str | None = None) -> str:
     ok = report["spearman"] >= threshold
-    lines = [f"### Cost-model accuracy gate (backend `{backend}`)", "",
-             f"Spearman rank correlation over {len(report['rows'])} bench "
-             f"rows: **{report['spearman']:.4f}** "
-             f"(threshold {threshold}) — "
-             f"{'PASS' if ok else '**FAIL**'}", ""]
+    lines = [f"### Cost-model accuracy gate (backend `{backend}`)", ""]
+    if fallback_from:
+        lines += [f"> **Note**: bench measured backend `{fallback_from}` "
+                  f"has no fitted coefficients — validated against the "
+                  f"`{backend}` model (cross-backend fallback).", ""]
+    lines += [f"Spearman rank correlation over {len(report['rows'])} bench "
+              f"rows: **{report['spearman']:.4f}** "
+              f"(threshold {threshold}) — "
+              f"{'PASS' if ok else '**FAIL**'}", ""]
     for net, rho in report["per_network"].items():
         lines.append(f"- `{net}`: {rho:.4f}")
     lines += ["", "| row | predicted us | measured us | ratio |",
@@ -104,12 +109,25 @@ def main(argv=None) -> int:
         print(f"error: cannot load cost model: {e}", file=sys.stderr)
         return 2
 
+    if model.fallback_from:
+        # the committed model has no entry for the bench's backend —
+        # say so loudly instead of validating borrowed coefficients as
+        # if they were calibrated for this backend
+        print(f"::warning::no fitted cost model for backend "
+              f"{model.fallback_from!r} — falling back to "
+              f"{model.backend!r} coefficients (rank decisions usually "
+              f"transfer; magnitudes do not)")
+
     report = validate(bench, model)
     if args.md:
-        print(markdown(report, args.threshold, model.backend))
+        print(markdown(report, args.threshold, model.backend,
+                       model.fallback_from))
     else:
+        fb = (f" [fallback from {model.fallback_from}]"
+              if model.fallback_from else "")
         print(f"cost-model spearman={report['spearman']:.4f} over "
-              f"{len(report['rows'])} rows (threshold {args.threshold})")
+              f"{len(report['rows'])} rows (threshold {args.threshold}) "
+              f"backend={model.backend}{fb}")
 
     if report["spearman"] >= args.threshold:
         return 0

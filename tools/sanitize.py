@@ -42,9 +42,11 @@ from repro.core.plan import compile_plan
 
 METHODS = (Method.BASIC_SIMD, Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8)
 
-#: the band-geometry fields both derivations must agree on (K105)
+#: the band-geometry fields both derivations must agree on (K105) —
+#: ``carry``/``steps`` cover the sliding-window pool accumulator (carried
+#: input rows between bands, physical band-axis grid steps)
 GEOM_KEYS = ("kind", "blk", "n_tiles", "total", "band", "row_step",
-             "in_base")
+             "in_base", "carry", "steps")
 
 #: batch the sweep sanitizes with (any n >= 2 exercises the frame axis)
 BATCH = 2
@@ -96,6 +98,7 @@ def sanitize_step(plan, step, label: str):
         kw_extra = {}
         if im2col:
             kw_extra["oc_block"] = _ADVANCED_OC_BLOCK[step.method]
+        kw = step.kwargs or {}
         return sanitizer.sanitize_conv2d(
             (BATCH, h, w, cp), (cv.kernel[0], cv.kernel[1], cp,
                                 cv.out_channels),
@@ -103,7 +106,9 @@ def sanitize_step(plan, step, label: str):
             im2col=im2col, oh_block=step.oh_block,
             pool_kernel=g.pool.kernel, pool_stride=g.pool.stride,
             pool_kind=g.pool.pool_kind, pool_relu=g.pool_relu,
-            lrn=_lrn_tuple(step.kwargs), label=label, **kw_extra)
+            lrn=_lrn_tuple(step.kwargs),
+            pool_carry=kw.get("pool_carry"),
+            lrn_oc_block=kw.get("lrn_oc_block"), label=label, **kw_extra)
     if step.kind == "chain":
         g = step.group
         c, h, w = step.in_shape
@@ -123,7 +128,7 @@ def sanitize_step(plan, step, label: str):
             pool_stride=pool.stride if pool is not None else None,
             pool_kind=pool.pool_kind if pool is not None else "max",
             pool_relu=g.pool_relu, lrn=_lrn_tuple(step.kwargs),
-            label=label)
+            oc_block_final=g.oc_block_final, label=label)
     if step.kind == "pool" and plan.use_pallas:
         spec = step.spec
         c, h, w = step.in_shape
@@ -162,8 +167,49 @@ def _cross_check(geom, plan, step, label: str):
     return []
 
 
+#: forced second-generation fused-cell configurations, appended to the
+#: default grid: the sliding-window pool carry (LRN opted out so the
+#: carry gate opens), the two-pass channel-halo oc-blocked LRN cell, and
+#: the oc-blocked chain final stage.  Each is (network, method, extra
+#: compile_plan knobs, tag suffix).
+EXTRA_CONFIGS = (
+    ("alexnet", Method.ADVANCED_SIMD_8,
+     dict(per_layer_fuse={"norm1": False, "norm2": False},
+          per_layer_pool_carry={"conv1": True, "conv2": True}), "carry"),
+    ("alexnet", Method.ADVANCED_SIMD_4,
+     dict(per_layer_fuse={"norm1": False, "norm2": False},
+          per_layer_pool_carry={"conv1": True, "conv2": True}), "carry"),
+    ("alexnet", Method.ADVANCED_SIMD_8,
+     dict(per_layer_lrn_oc_block={"conv1": True, "conv2": True}),
+     "lrn-oc-block"),
+    ("alexnet", Method.ADVANCED_SIMD_4,
+     dict(per_layer_lrn_oc_block={"conv1": True, "conv2": True}),
+     "lrn-oc-block"),
+    ("alexnet", Method.ADVANCED_SIMD_8,
+     dict(per_layer_oc_block_final={"conv5": 8}), "oc-block-final"),
+    ("alexnet", Method.ADVANCED_SIMD_4,
+     dict(per_layer_oc_block_final={"conv5": 4}), "oc-block-final"),
+)
+
+
+def _sanitize_plan(plan, tag, findings):
+    n = 0
+    for idx, step in enumerate(plan.steps):
+        label = f"step{idx}:{'+'.join(step.names)}"
+        fs, geom = sanitize_step(plan, step, label)
+        if fs is None:
+            continue
+        n += 1
+        fs = list(fs) + _cross_check(geom, plan, step, label)
+        for f in fs:
+            findings.append(Finding(
+                f.severity, f"{tag}::{f.step}", f.rule, f.detail))
+    return n
+
+
 def sweep(networks=None):
-    """Sanitize every (network x method x fuse x backend) combination.
+    """Sanitize every (network x method x fuse x backend) combination,
+    plus the forced second-generation cell configs (``EXTRA_CONFIGS``).
 
     Same grid and tag format as ``verify_sweep.sweep``; ``networks``
     defaults to the bundled ``NETWORKS`` registry (tests inject seeded
@@ -181,18 +227,15 @@ def sweep(networks=None):
                                         use_pallas=use_pallas, verify=False)
                     tag = (f"{name}/{method.value}/fuse={fuse}/"
                            f"pallas={use_pallas}")
-                    for idx, step in enumerate(plan.steps):
-                        label = f"step{idx}:{'+'.join(step.names)}"
-                        fs, geom = sanitize_step(plan, step, label)
-                        if fs is None:
-                            continue
-                        dispatches += 1
-                        fs = list(fs) + _cross_check(geom, plan, step,
-                                                     label)
-                        for f in fs:
-                            findings.append(Finding(
-                                f.severity, f"{tag}::{f.step}", f.rule,
-                                f.detail))
+                    dispatches += _sanitize_plan(plan, tag, findings)
+    for name, method, knobs, suffix in EXTRA_CONFIGS:
+        if name not in networks:
+            continue
+        combos += 1
+        plan = compile_plan(networks[name](), method=method, fuse=True,
+                            use_pallas=True, verify=False, **knobs)
+        tag = f"{name}/{method.value}/fuse=True/pallas=True/{suffix}"
+        dispatches += _sanitize_plan(plan, tag, findings)
     return findings, combos, dispatches
 
 

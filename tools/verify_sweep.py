@@ -26,9 +26,34 @@ from repro.core.plan import compile_plan
 
 METHODS = (Method.BASIC_SIMD, Method.ADVANCED_SIMD_4, Method.ADVANCED_SIMD_8)
 
+#: forced second-generation fused-cell configurations appended to the
+#: grid — the sliding-window pool carry (LRN opted out so the carry gate
+#: opens), the two-pass channel-halo oc-blocked LRN cell, and the
+#: oc-blocked chain final stage.  Each entry is (network, method, extra
+#: compile_plan knobs, tag suffix); mirrored by ``tools/sanitize.py``.
+EXTRA_CONFIGS = (
+    ("alexnet", Method.ADVANCED_SIMD_8,
+     dict(per_layer_fuse={"norm1": False, "norm2": False},
+          per_layer_pool_carry={"conv1": True, "conv2": True}), "carry"),
+    ("alexnet", Method.ADVANCED_SIMD_4,
+     dict(per_layer_fuse={"norm1": False, "norm2": False},
+          per_layer_pool_carry={"conv1": True, "conv2": True}), "carry"),
+    ("alexnet", Method.ADVANCED_SIMD_8,
+     dict(per_layer_lrn_oc_block={"conv1": True, "conv2": True}),
+     "lrn-oc-block"),
+    ("alexnet", Method.ADVANCED_SIMD_4,
+     dict(per_layer_lrn_oc_block={"conv1": True, "conv2": True}),
+     "lrn-oc-block"),
+    ("alexnet", Method.ADVANCED_SIMD_8,
+     dict(per_layer_oc_block_final={"conv5": 8}), "oc-block-final"),
+    ("alexnet", Method.ADVANCED_SIMD_4,
+     dict(per_layer_oc_block_final={"conv5": 4}), "oc-block-final"),
+)
+
 
 def sweep(networks=None):
-    """Verify every (network × method × fuse × backend) combination.
+    """Verify every (network × method × fuse × backend) combination,
+    plus the forced second-generation cell configs (``EXTRA_CONFIGS``).
 
     ``networks`` maps name -> NetworkDef factory; defaults to the
     bundled ``NETWORKS`` registry (tests inject seeded-defect netdefs
@@ -50,6 +75,16 @@ def sweep(networks=None):
                         findings.append(Finding(
                             f.severity, f"{tag}::{f.step}", f.rule,
                             f.detail))
+    for name, method, knobs, suffix in EXTRA_CONFIGS:
+        if name not in networks:
+            continue
+        combos += 1
+        plan = compile_plan(networks[name](), method=method, fuse=True,
+                            use_pallas=True, verify=False, **knobs)
+        tag = f"{name}/{method.value}/fuse=True/pallas=True/{suffix}"
+        for f in verify_plan(plan):
+            findings.append(Finding(
+                f.severity, f"{tag}::{f.step}", f.rule, f.detail))
     return findings, combos
 
 
